@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: interpret-mode correctness-path timing (CPU;
+TPU wall-time is not measurable here) + analytic flops per call, and the
+jnp reference timing for context.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(csv_rows):
+    print("\n== kernels (interpret mode on CPU; ref = pure-jnp oracle) ==")
+    # flash attention
+    B, Hk, G, S, D = 1, 2, 2, 512, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hk, G, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hk, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hk, S, D), jnp.float32)
+    flops = 2 * 2 * B * Hk * G * S * S * D
+    t_k = _time(lambda: ops.flash_attention(q, k, v, scale=0.125, block_q=128, block_k=128))
+    t_r = _time(lambda: ref.flash_attention_ref(q, k, v, scale=0.125))
+    print(f"flash_attention  S={S}: kernel {t_k:9.0f}us ref {t_r:9.0f}us ({flops / 1e6:.0f} MFLOP)")
+    csv_rows.append(("flash_attention_512", t_k, f"ref_us={t_r:.0f};mflop={flops / 1e6:.0f}"))
+
+    # ssd scan
+    Bb, S2, nh, hd, ds = 1, 512, 4, 32, 32
+    x = jax.random.normal(ks[0], (Bb, S2, nh, hd)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S2, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    B_ = jax.random.normal(ks[0], (Bb, S2, ds)) * 0.5
+    C_ = jax.random.normal(ks[1], (Bb, S2, ds)) * 0.5
+    t_k = _time(lambda: ops.ssd_scan(x, dt, A, B_, C_, chunk=64))
+    t_r = _time(lambda: ref.ssd_scan_ref(x, dt, A, B_, C_))
+    print(f"ssd_scan        S={S2}: kernel {t_k:9.0f}us ref {t_r:9.0f}us")
+    csv_rows.append(("ssd_scan_512", t_k, f"ref_us={t_r:.0f}"))
+
+    # fedavg reduce (cohort 32 x 1M params)
+    p = jax.random.normal(ks[0], (32, 1_000_000), jnp.float32)
+    w = jnp.ones((32,)) / 32
+    t_k = _time(lambda: ops.fedavg_reduce(p, w))
+    t_r = _time(lambda: ref.fedavg_reduce_ref(p, w))
+    print(f"fedavg_reduce 32x1M : kernel {t_k:9.0f}us ref {t_r:9.0f}us")
+    csv_rows.append(("fedavg_reduce_32x1M", t_k, f"ref_us={t_r:.0f}"))
+
+    # aoi topk at fleet scale
+    ages = jax.random.randint(ks[0], (1_000_000,), 0, 100).astype(jnp.float32)
+    t_k = _time(lambda: ops.oldest_age_topk(ages, 128))
+    t_r = _time(lambda: ref.topk_ref(ages, 128))
+    print(f"aoi_topk n=1M k=128 : kernel {t_k:9.0f}us ref {t_r:9.0f}us")
+    csv_rows.append(("aoi_topk_1M", t_k, f"ref_us={t_r:.0f}"))

@@ -1,0 +1,75 @@
+"""Roofline table from the dry-run artifacts (launch/dryrun.py output).
+
+Per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+useful-flops ratio (MODEL_FLOPS / HLO_FLOPS x chips), and per-device memory
+traffic — EXPERIMENTS.md §Roofline is generated from this.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load_results(pattern: str = "dryrun_*.json"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def format_table(rows, mesh_filter=None):
+    lines = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':8s} | {'comp ms':>9} {'mem ms':>9} "
+           f"{'coll ms':>9} | {'dominant':10s} {'useful':>6} | {'flops/dev':>10}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for r in rows:
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} | "
+                         f"{'skipped: ' + r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} | ERROR")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} | "
+            f"{rf['compute_s'] * 1e3:9.2f} {rf['memory_s'] * 1e3:9.2f} "
+            f"{rf['collective_s'] * 1e3:9.2f} | {rf['dominant'][:-2]:10s} "
+            f"{r['useful_flops_ratio']:6.3f} | {r['flops_per_device']:.2e}"
+        )
+    return "\n".join(lines)
+
+
+def run(csv_rows):
+    rows = load_results()
+    # keep the canonical (un-tagged) baselines for the table
+    base = [r for r in rows if not r.get("tags")]
+    if not base:
+        print("\n== roofline: no dry-run artifacts found (run launch/dryrun.py) ==")
+        return
+    print("\n== roofline (single-pod 16x16, from dry-run artifacts) ==")
+    print(format_table(base, mesh_filter="16x16"))
+    print("\n== roofline (multi-pod 2x16x16) ==")
+    print(format_table(base, mesh_filter="2x16x16"))
+    for r in base:
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        csv_rows.append(
+            (f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e6,
+             f"dominant={rf['dominant']};useful={r['useful_flops_ratio']:.3f};"
+             f"compute_ms={rf['compute_s'] * 1e3:.2f};memory_ms={rf['memory_s'] * 1e3:.2f};"
+             f"collective_ms={rf['collective_s'] * 1e3:.2f}")
+        )
+    n_ok = sum(r["status"] == "ok" for r in base)
+    n_skip = sum(r["status"] == "skipped" for r in base)
+    print(f"\npairs: ok={n_ok} documented-skips={n_skip} errors="
+          f"{sum(r['status'] == 'error' for r in base)}")

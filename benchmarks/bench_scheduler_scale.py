@@ -1,0 +1,66 @@
+"""Scheduler scalability (the paper's decentralization claim, quantified):
+per-round wall time of the Markov decision step vs centralized oldest-age
+top-k as the fleet grows, plus the paper-relevant age histogram check.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import load_metric as lm
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _markov_step(probs, m):
+    @jax.jit
+    def step(ages, key):
+        chain = jnp.minimum(ages, m)
+        sel = jax.random.uniform(key, ages.shape) < probs[chain]
+        return sel, (ages + 1) * (1 - sel.astype(ages.dtype))
+
+    return step
+
+
+def run(csv_rows):
+    print("\n== scheduler scaling: decentralized markov vs centralized top-k ==")
+    m = 10
+    for n in (10_000, 100_000, 1_000_000):
+        k = int(n * 0.15)
+        probs = jnp.asarray(lm.optimal_probs(n, k, m), jnp.float32)
+        step = _markov_step(probs, m)
+        ages = jnp.zeros((n,), jnp.int32)
+        sel, ages = step(ages, KEY)  # warm
+        t0 = time.time()
+        for i in range(5):
+            sel, ages = step(ages, jax.random.fold_in(KEY, i))
+        jax.block_until_ready(ages)
+        t_markov = (time.time() - t0) / 5 * 1e6
+
+        agesf = jax.random.randint(KEY, (n,), 0, 40).astype(jnp.float32)
+        kk = min(k, 1024)  # top-k cost grows with k; cap for the bench
+        ops.oldest_age_topk(agesf, kk)  # warm
+        t0 = time.time()
+        for _ in range(3):
+            jax.block_until_ready(ops.oldest_age_topk(agesf, kk))
+        t_topk = (time.time() - t0) / 3 * 1e6
+        print(f"n={n:>9,}: markov step {t_markov:10.0f}us | "
+              f"oldest-age top-{kk} {t_topk:10.0f}us")
+        csv_rows.append((f"sched_scale_n{n}", t_markov, f"topk_us={t_topk:.0f}"))
+
+    # steady-state age distribution matches pi (Eqs. 12-14)
+    n, k = 100_000, 15_000
+    probs = jnp.asarray(lm.optimal_probs(n, k, m), jnp.float32)
+    pi = lm.steady_state(np.asarray(probs))
+    step = _markov_step(probs, m)
+    ages = jnp.zeros((n,), jnp.int32)
+    for i in range(200):
+        _, ages = step(ages, jax.random.fold_in(KEY, i))
+    hist = np.bincount(np.asarray(jnp.minimum(ages, m)), minlength=m + 1) / n
+    err = np.abs(hist - pi).max()
+    print(f"steady-state age histogram vs pi: max abs err {err:.4f}")
+    csv_rows.append(("steady_state_hist_err", 0.0, f"{err:.5f}"))

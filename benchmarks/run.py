@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure plus the
+framework deliverables. Prints a ``name,us_per_call,derived`` CSV at the
+end (and human-readable tables along the way).
+
+  PYTHONPATH=src python -m benchmarks.run                # all, CPU-budget scale
+  PYTHONPATH=src python -m benchmarks.run --only variance,roofline
+  PYTHONPATH=src python -m benchmarks.run --paper-scale  # full Figs 2-4 protocol
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: variance,scheduler,kernels,convergence,roofline")
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--rounds", type=int, default=12)
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def on(name):
+        return want is None or name in want
+
+    csv_rows = []
+    t0 = time.time()
+    if on("variance"):
+        from benchmarks import bench_variance
+
+        bench_variance.run(csv_rows)
+    if on("scheduler"):
+        from benchmarks import bench_scheduler_scale
+
+        bench_scheduler_scale.run(csv_rows)
+    if on("kernels"):
+        from benchmarks import bench_kernels
+
+        bench_kernels.run(csv_rows)
+    if on("convergence"):
+        from benchmarks import bench_convergence
+
+        bench_convergence.run(csv_rows, rounds=args.rounds,
+                              paper_scale=args.paper_scale)
+    if on("roofline"):
+        from benchmarks import bench_roofline
+
+        bench_roofline.run(csv_rows)
+
+    print(f"\n[{time.time() - t0:.1f}s total]")
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

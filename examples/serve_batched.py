@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests: prefill + cached decode
+(the serve_step the decode_32k / long_500k dry-runs lower).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-370m
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--batch", "4", "--prompt-len", "16",
+                "--gen", "24", *sys.argv[1:]]
+    serve.main()

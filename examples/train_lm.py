@@ -1,0 +1,13 @@
+"""Train a ~20M-param llama-family model for a few hundred steps on CPU —
+the same train_step the dry-run lowers for the production mesh.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 150
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "tinyllama-1.1b", "--steps", "150",
+                "--batch", "8", "--seq", "128", *sys.argv[1:]]
+    train.main()

@@ -1,0 +1,94 @@
+"""Checkpoint store: pytree -> sharded .npz files + JSON manifest.
+
+Saves arbitrary pytrees (model params, optimizer state, FL server state
+incl. scheduler ages — so a federated run can resume with its AoI state
+intact). Large leaves are split across multiple npz shards to bound file
+size; dtypes (incl. bfloat16, stored as uint16 bit patterns) round-trip.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, tree: Any, step: int = 0) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest: Dict = {"step": step, "leaves": [], "shards": []}
+    shard_arrays: Dict[str, np.ndarray] = {}
+    shard_id, shard_bytes = 0, 0
+    for path, leaf in leaves:
+        name = _key_str(path)
+        arr = np.asarray(leaf)
+        entry = {"name": name, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            entry["stored_as"] = "uint16_bf16"
+        if shard_bytes + arr.nbytes > _SHARD_BYTES and shard_arrays:
+            _flush(directory, shard_id, shard_arrays, manifest)
+            shard_arrays, shard_bytes = {}, 0
+            shard_id += 1
+        key = f"a{len(shard_arrays)}"
+        shard_arrays[key] = arr
+        entry["shard"] = shard_id
+        entry["key"] = key
+        shard_bytes += arr.nbytes
+        manifest["leaves"].append(entry)
+    if shard_arrays:
+        _flush(directory, shard_id, shard_arrays, manifest)
+    mpath = os.path.join(directory, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return mpath
+
+
+def _flush(directory, shard_id, arrays, manifest):
+    fname = f"shard_{shard_id:04d}.npz"
+    np.savez(os.path.join(directory, fname), **arrays)
+    manifest["shards"].append(fname)
+
+
+def load_checkpoint(directory: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards = [
+        np.load(os.path.join(directory, fname)) for fname in manifest["shards"]
+    ]
+    by_name = {}
+    for e in manifest["leaves"]:
+        arr = shards[e["shard"]][e["key"]]
+        if e.get("stored_as") == "uint16_bf16":
+            arr = arr.view(jnp.bfloat16)
+        by_name[e["name"]] = arr
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in paths:
+        name = _key_str(path)
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = by_name[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {name}: {arr.shape} vs {leaf.shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]

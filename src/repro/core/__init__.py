@@ -1,0 +1,22 @@
+"""Paper core: AoI load metric, optimal Markov scheduling (Theorems 1-2)."""
+from repro.core.aoi import age_update, chain_state  # noqa: F401
+from repro.core.load_metric import (  # noqa: F401
+    empirical_load_stats,
+    markov_moments,
+    markov_var,
+    optimal_probs,
+    optimal_var,
+    peak_ages_from_history,
+    random_selection_mean,
+    random_selection_var,
+    selection_rate,
+    steady_state,
+    theorem1_optimal,
+    theorem1_var,
+)
+from repro.core.selection import (  # noqa: F401
+    POLICY_NAMES,
+    Policy,
+    make_policy,
+    simulate,
+)

@@ -1,0 +1,36 @@
+"""Age-of-Information dynamics (Eq. 4) as pure JAX functions.
+
+Each client's age increases by one when not selected and resets to zero when
+selected: A^{t+1} = (A^t + 1)(1 - S^t). The Markov *chain state* is the age
+clipped to the maximum permissible age m (state m self-loops).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def age_update(ages: jnp.ndarray, selected: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (4): elementwise age evolution. ``selected`` is bool/0-1."""
+    return (ages + 1) * (1 - selected.astype(ages.dtype))
+
+
+def chain_state(ages: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Markov chain state = min(age, m)."""
+    return jnp.minimum(ages, m)
+
+
+def peak_age_accumulate(
+    ages: jnp.ndarray, selected: jnp.ndarray, sum_x: jnp.ndarray, sum_x2: jnp.ndarray, count: jnp.ndarray
+):
+    """Streaming accumulation of peak-age (= X) first/second moments.
+
+    On each selection, the client's pre-reset age + 1 is one sample of X
+    (age counts rounds since last selection; the gap between selections is
+    age+1 when selection happens on the current round).
+    """
+    x = (ages + 1).astype(jnp.float64) if ages.dtype == jnp.int64 else (ages + 1).astype(jnp.float32)
+    sel = selected.astype(x.dtype)
+    sum_x = sum_x + jnp.sum(x * sel)
+    sum_x2 = sum_x2 + jnp.sum(x * x * sel)
+    count = count + jnp.sum(sel)
+    return sum_x, sum_x2, count

@@ -1,0 +1,252 @@
+"""Client-selection policies.
+
+Every policy is a pair of pure functions wrapped in a ``Policy`` record:
+
+    state  = policy.init(key, n)
+    sel, state = policy.step(state, key)     # sel: (n,) bool
+
+All steps are jit-compatible (n, k, m static). State is a dict pytree so it
+can be checkpointed alongside the model.
+
+Policies:
+  * ``random``      — paper's baseline [2]: exactly k uniform at random.
+  * ``markov``      — the paper's decentralized age-dependent Markov policy
+                      with the optimal probabilities of Theorem 2.
+  * ``markov_probs``— same mechanism, arbitrary user-supplied p_0..p_m
+                      (Remark 1's dropout-robust variants).
+  * ``oldest_age``  — centralized equivalent (Remark 1): top-k by age.
+  * ``round_robin`` — deterministic staggered blocks (Var[X] = 0 when k | n).
+  * ``gumbel_age``  — beyond-paper: age-weighted sampling without
+                      replacement (Gumbel top-k on beta*age), interpolating
+                      random (beta=0) -> oldest-age (beta->inf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import load_metric
+from repro.core.aoi import age_update
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    init: Callable  # (key, n) -> state
+    step: Callable  # (state, key) -> (selected bool (n,), state)
+    exact_k: bool  # cohort size deterministic?
+
+
+def _base_state(n: int) -> Dict:
+    return {
+        "ages": jnp.zeros((n,), jnp.int32),
+        "round": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Random selection (paper's baseline)
+# ---------------------------------------------------------------------------
+
+
+def make_random(n: int, k: int) -> Policy:
+    def init(key, n_=n):
+        return _base_state(n_)
+
+    def step(state, key):
+        perm = jax.random.permutation(key, n)
+        sel = jnp.zeros((n,), jnp.bool_).at[perm[:k]].set(True)
+        return sel, _advance(state, sel)
+
+    return Policy("random", init, step, exact_k=True)
+
+
+# ---------------------------------------------------------------------------
+# Decentralized Markov policy (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+
+def make_markov(
+    n: int,
+    k: int,
+    m: int,
+    probs: Optional[np.ndarray] = None,
+    steady_start: bool = True,
+) -> Policy:
+    """Age-dependent Bernoulli policy. Each client *independently* draws
+    send ~ Bernoulli(p_{min(age, m)}) — no coordination (paper Sec. III).
+
+    ``steady_start=True`` samples initial ages from the stationary
+    distribution (the paper analyses the chain at steady state); with a
+    cold start (all ages 0 and p_0 = 0) the chain still converges but the
+    first ~n/k rounds select nobody.
+    """
+    p = np.asarray(
+        load_metric.optimal_probs(n, k, m) if probs is None else probs,
+        dtype=np.float32,
+    )
+    if len(p) != m + 1:
+        raise ValueError(f"probs must have length m+1={m + 1}")
+    pi = load_metric.steady_state(p)
+    p_dev = jnp.asarray(p)
+    pi_dev = jnp.asarray(pi.astype(np.float32))
+
+    def init(key, n_=n):
+        state = _base_state(n_)
+        if steady_start:
+            ages = jax.random.choice(key, m + 1, shape=(n_,), p=pi_dev)
+            state["ages"] = ages.astype(jnp.int32)
+        return state
+
+    def step(state, key):
+        chain = jnp.minimum(state["ages"], m)
+        send_p = p_dev[chain]
+        sel = jax.random.uniform(key, (n,)) < send_p
+        return sel, _advance(state, sel)
+
+    return Policy("markov", init, step, exact_k=False)
+
+
+def make_markov_hetero(
+    rates: np.ndarray, m: int, steady_start: bool = True
+) -> Policy:
+    """Heterogeneous decentralized Markov policy: client i is selected at
+    its own rate ``rates[i]`` (mean gap 1/rates[i]), each with its own
+    Theorem-2-optimal chain. Extends the paper beyond uniform k/n —
+    clients with more compute/data can participate more often while every
+    client's own Var[X_i] stays at its optimum. Fully decentralized: the
+    per-client probability table is the only coordination artifact.
+    """
+    rates = np.asarray(rates, dtype=np.float64)
+    if np.any(rates <= 0) or np.any(rates > 1):
+        raise ValueError("rates in (0, 1]")
+    n = len(rates)
+    table = np.stack(
+        [load_metric.optimal_probs_for_mean(max(1.0 / r, 1.0), m) for r in rates]
+    )  # (n, m+1)
+    table_dev = jnp.asarray(table, jnp.float32)
+    pis = np.stack([load_metric.steady_state(p) for p in table])
+
+    def init(key, n_=n):
+        state = _base_state(n_)
+        if steady_start:
+            u = jax.random.uniform(key, (n_,))
+            cdf = jnp.asarray(np.cumsum(pis, axis=1), jnp.float32)
+            ages = jnp.sum(u[:, None] > cdf, axis=1)
+            state["ages"] = ages.astype(jnp.int32)
+        return state
+
+    def step(state, key):
+        chain = jnp.minimum(state["ages"], m)
+        send_p = jnp.take_along_axis(table_dev, chain[:, None], axis=1)[:, 0]
+        sel = jax.random.uniform(key, (n,)) < send_p
+        return sel, _advance(state, sel)
+
+    return Policy("markov_hetero", init, step, exact_k=False)
+
+
+# ---------------------------------------------------------------------------
+# Oldest-age top-k (Remark 1's centralized equivalent)
+# ---------------------------------------------------------------------------
+
+
+def make_oldest_age(n: int, k: int) -> Policy:
+    def init(key, n_=n):
+        state = _base_state(n_)
+        # stagger initial ages so the first rounds aren't degenerate ties
+        state["ages"] = jax.random.permutation(key, n_).astype(jnp.int32) % max(
+            2 * (n_ // max(k, 1)), 2
+        )
+        return state
+
+    def step(state, key):
+        # random tie-break: add sub-integer uniform noise to ages
+        noise = jax.random.uniform(key, (n,), minval=0.0, maxval=0.5)
+        score = state["ages"].astype(jnp.float32) + noise
+        _, idx = jax.lax.top_k(score, k)
+        sel = jnp.zeros((n,), jnp.bool_).at[idx].set(True)
+        return sel, _advance(state, sel)
+
+    return Policy("oldest_age", init, step, exact_k=True)
+
+
+# ---------------------------------------------------------------------------
+# Round robin (deterministic; Var[X]=0 when k divides n)
+# ---------------------------------------------------------------------------
+
+
+def make_round_robin(n: int, k: int) -> Policy:
+    def init(key, n_=n):
+        return _base_state(n_)
+
+    def step(state, key):
+        start = (state["round"] * k) % n
+        idx = (start + jnp.arange(k)) % n
+        sel = jnp.zeros((n,), jnp.bool_).at[idx].set(True)
+        return sel, _advance(state, sel)
+
+    return Policy("round_robin", init, step, exact_k=True)
+
+
+# ---------------------------------------------------------------------------
+# Gumbel age-weighted top-k (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+def make_gumbel_age(n: int, k: int, beta: float = 1.0) -> Policy:
+    def init(key, n_=n):
+        return _base_state(n_)
+
+    def step(state, key):
+        g = jax.random.gumbel(key, (n,))
+        score = beta * state["ages"].astype(jnp.float32) + g
+        _, idx = jax.lax.top_k(score, k)
+        sel = jnp.zeros((n,), jnp.bool_).at[idx].set(True)
+        return sel, _advance(state, sel)
+
+    return Policy(f"gumbel_age(beta={beta})", init, step, exact_k=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _advance(state: Dict, sel: jnp.ndarray) -> Dict:
+    return {
+        **state,
+        "ages": age_update(state["ages"], sel),
+        "round": state["round"] + 1,
+    }
+
+
+def make_policy(name: str, n: int, k: int, m: int = 10, **kw) -> Policy:
+    if name == "random":
+        return make_random(n, k)
+    if name == "markov":
+        return make_markov(n, k, m, **kw)
+    if name == "oldest_age":
+        return make_oldest_age(n, k)
+    if name == "round_robin":
+        return make_round_robin(n, k)
+    if name == "gumbel_age":
+        return make_gumbel_age(n, k, **kw)
+    raise ValueError(f"unknown policy {name!r}")
+
+
+POLICY_NAMES = ("random", "markov", "oldest_age", "round_robin", "gumbel_age")
+
+
+def simulate(policy: Policy, key: jax.Array, n: int, rounds: int) -> np.ndarray:
+    """Run a policy for ``rounds`` rounds; returns (rounds, n) bool history."""
+    state = policy.init(key, n)
+
+    def body(state, key):
+        sel, state = policy.step(state, key)
+        return state, sel
+
+    keys = jax.random.split(jax.random.fold_in(key, 1), rounds)
+    _, hist = jax.lax.scan(body, state, keys)
+    return np.asarray(hist)

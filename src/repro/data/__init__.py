@@ -1,0 +1,12 @@
+from repro.data.partition import (  # noqa: F401
+    label_histograms,
+    partition_dirichlet,
+    partition_iid,
+)
+from repro.data.synthetic import (  # noqa: F401
+    DATASET_SPECS,
+    ImageDataset,
+    load_dataset,
+    make_image_dataset,
+    make_token_stream,
+)

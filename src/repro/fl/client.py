@@ -1,0 +1,42 @@
+"""Client local training: E epochs of SGD over the client shard (FedAvg
+step (i)). Pure function of (global params, client shard, key, lr) so it
+vmaps across the cohort and shards across the data axis of the mesh.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def make_local_update(
+    loss_fn: Callable, epochs: int, batch_size: int, examples: int
+) -> Callable:
+    """Returns f(params, client_shard, key, lr) -> (params, mean_loss).
+
+    Each epoch reshuffles the shard and runs floor(examples/bs) SGD steps
+    (paper: E=5, B=50).
+    """
+    nb = max(examples // batch_size, 1)
+    bs = min(batch_size, examples)
+
+    def local_update(params, shard: Dict, key, lr):
+        def epoch_perm(k):
+            return jax.random.permutation(k, examples)[: nb * bs].reshape(nb, bs)
+
+        perms = jax.vmap(epoch_perm)(jax.random.split(key, epochs)).reshape(
+            epochs * nb, bs
+        )
+
+        def step(carry, idx):
+            p = carry
+            batch = jax.tree.map(lambda a: a[idx], shard)
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            p = jax.tree.map(lambda w, gw: w - lr * gw.astype(w.dtype), p, g)
+            return p, loss
+
+        params, losses = jax.lax.scan(step, params, perms)
+        return params, losses.mean()
+
+    return local_update

@@ -1,0 +1,31 @@
+"""Federated-learning run configuration (paper Sec. IV defaults)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_clients: int = 100
+    k: int = 15  # paper: 15% participation
+    m: int = 10  # max permissible age (Markov policy)
+    policy: str = "markov"  # random | markov | oldest_age | round_robin | gumbel_age
+    rounds: int = 100
+    local_epochs: int = 5
+    batch_size: int = 50
+    lr0: float = 0.1
+    lr_decay: float = 0.998
+    seed: int = 0
+    # cohort padding for variable-size policies (markov): vmap width
+    max_cohort: Optional[int] = None
+    eval_every: int = 1
+
+    def cohort_width(self) -> int:
+        if self.max_cohort is not None:
+            return self.max_cohort
+        # Markov cohort is ~Binomial(n, k/n): pad to k + 5*sigma
+        import math
+
+        sigma = math.sqrt(self.n_clients * (self.k / self.n_clients) * (1 - self.k / self.n_clients))
+        return min(self.n_clients, int(self.k + 4 * sigma) + 1)

@@ -1,0 +1,137 @@
+"""FL task abstraction: anything with client-sharded data + a loss.
+
+Two constructors: the paper's CNN classification task, and a causal-LM
+task so any assigned architecture (reduced variant on CPU, full under the
+production mesh) can be the federated workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.paper_cnn import CNNConfig
+from repro.data import partition_dirichlet, partition_iid
+from repro.data.synthetic import ImageDataset, make_token_stream
+from repro.models import cnn as cnn_mod
+from repro.models import factory
+
+
+@dataclasses.dataclass(frozen=True)
+class FLTask:
+    name: str
+    init: Callable  # key -> params
+    loss_fn: Callable  # (params, batch) -> scalar
+    eval_fn: Callable  # (params) -> dict (accuracy/loss on held-out data)
+    client_data: Dict  # pytree, leading axis = n_clients
+    examples_per_client: int
+
+
+# ---------------------------------------------------------------------------
+# Paper CNN task
+# ---------------------------------------------------------------------------
+
+
+def make_cnn_task(
+    cfg: CNNConfig,
+    train: ImageDataset,
+    test: ImageDataset,
+    n_clients: int,
+    noniid_alpha: Optional[float] = None,
+    seed: int = 0,
+) -> FLTask:
+    if noniid_alpha is None:
+        parts = partition_iid(len(train.labels), n_clients, seed)
+    else:
+        parts = partition_dirichlet(train.labels, n_clients, alpha=noniid_alpha, seed=seed)
+    cx = jnp.asarray(train.images[parts])  # (n, shard, H, W, C)
+    cy = jnp.asarray(train.labels[parts])  # (n, shard)
+    tx, ty = jnp.asarray(test.images), jnp.asarray(test.labels)
+
+    def loss_fn(params, batch):
+        logits = cnn_mod.forward(params, batch["x"])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+
+    @jax.jit
+    def eval_fn(params):
+        # batched eval to bound memory
+        bs = min(500, int(tx.shape[0]))
+        nb = max(tx.shape[0] // bs, 1)
+
+        def body(carry, i):
+            correct, loss = carry
+            xb = jax.lax.dynamic_slice_in_dim(tx, i * bs, bs)
+            yb = jax.lax.dynamic_slice_in_dim(ty, i * bs, bs)
+            logits = cnn_mod.forward(params, xb)
+            logp = jax.nn.log_softmax(logits)
+            loss += -jnp.take_along_axis(logp, yb[:, None], axis=-1).sum()
+            correct += (logits.argmax(-1) == yb).sum()
+            return (correct, loss), None
+
+        (correct, loss), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.int32), jnp.zeros(())), jnp.arange(nb)
+        )
+        ntot = nb * bs
+        return {"accuracy": correct / ntot, "loss": loss / ntot}
+
+    return FLTask(
+        name=cfg.name,
+        init=lambda key: cnn_mod.init_params(key, cfg),
+        loss_fn=loss_fn,
+        eval_fn=eval_fn,
+        client_data={"x": cx, "y": cy},
+        examples_per_client=int(cx.shape[1]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Causal-LM task (any assigned architecture as the FL workload)
+# ---------------------------------------------------------------------------
+
+
+def make_lm_task(
+    cfg: ArchConfig,
+    n_clients: int,
+    seq_len: int = 128,
+    docs_per_client: int = 16,
+    seed: int = 0,
+) -> FLTask:
+    model = factory.build(cfg)
+    total = n_clients * docs_per_client * (seq_len + 1)
+    stream = make_token_stream(cfg.vocab_size, total + seq_len, seed)
+    docs = np.lib.stride_tricks.sliding_window_view(stream, seq_len + 1)[
+        : n_clients * docs_per_client * (seq_len + 1) : seq_len + 1
+    ][: n_clients * docs_per_client]
+    docs = docs.reshape(n_clients, docs_per_client, seq_len + 1)
+    cdata = {"docs": jnp.asarray(docs)}
+    held = jnp.asarray(
+        np.lib.stride_tricks.sliding_window_view(
+            make_token_stream(cfg.vocab_size, 32 * (seq_len + 1) + seq_len, seed + 99),
+            seq_len + 1,
+        )[:: seq_len + 1][:32]
+    )
+
+    def loss_fn(params, batch):
+        docs_b = batch["docs"]  # (bs, seq+1)
+        b = {"tokens": docs_b[:, :-1], "labels": docs_b[:, 1:]}
+        loss, _ = model.loss(params, b)
+        return loss
+
+    @jax.jit
+    def eval_fn(params):
+        loss = loss_fn(params, {"docs": held})
+        return {"loss": loss, "accuracy": -loss}  # higher is better convention
+
+    return FLTask(
+        name=f"lm:{cfg.name}",
+        init=model.init,
+        loss_fn=loss_fn,
+        eval_fn=eval_fn,
+        client_data=cdata,
+        examples_per_client=docs_per_client,
+    )

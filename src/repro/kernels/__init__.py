@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  flash_attention — GQA causal/sliding/chunked flash attention
+  ssd_scan        — Mamba2 SSD chunked scan (state carried in VMEM)
+  flash_decode    — one-token attention over a long KV cache (serving)
+  fedavg_reduce   — FedAvg server aggregation (weighted cohort mean)
+  aoi_topk        — fleet-scale oldest-age top-k (centralized baseline)
+
+``ops`` holds the jit'd public wrappers (interpret=True on CPU);
+``ref`` the pure-jnp oracles every kernel is tested against.
+"""

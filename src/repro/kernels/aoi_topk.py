@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: oldest-age top-k candidate selection at fleet scale.
+
+The centralized oldest-age policy (paper Remark 1) needs the k highest
+ages among n clients, where n may be millions. Phase 1 (this kernel)
+tiles the age vector and extracts each tile's local top-k by iterative
+masked max (k iterations of a VPU max-reduce — no sort needed); phase 2
+(ops.py) runs a tiny jnp top-k over the (num_tiles * k) candidates.
+
+VMEM per program: ages tile (block_n,) f32 + (k,) outputs — trivially
+small; block_n=65536 streams the fleet through VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 65536
+NEG = -1e30
+
+
+def _topk_kernel(ages_ref, vals_ref, idx_ref, *, k: int, block_n: int):
+    ti = pl.program_id(0)
+    a = ages_ref[...].astype(jnp.float32)  # (block_n,)
+    base = ti * block_n
+
+    def body(i, carry):
+        a_cur, = carry
+        m = jnp.max(a_cur)
+        am = jnp.argmax(a_cur)
+        vals_ref[i] = m
+        idx_ref[i] = (base + am).astype(jnp.int32)
+        a_cur = a_cur.at[am].set(NEG)
+        return (a_cur,)
+
+    jax.lax.fori_loop(0, k, body, (a,))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def tile_topk(
+    ages: jnp.ndarray,  # (n,) int32/float
+    *,
+    k: int,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+):
+    """Returns (vals (tiles, k), idx (tiles, k)) per-tile top-k candidates."""
+    n = ages.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        ages = jnp.pad(ages, (0, pad), constant_values=-1)
+    tiles = ages.shape[0] // bn
+    kernel = functools.partial(_topk_kernel, k=k, block_n=bn)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles * k,), jnp.float32),
+            jax.ShapeDtypeStruct((tiles * k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ages)
+    return vals.reshape(tiles, k), idx.reshape(tiles, k)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel for FedAvg server aggregation.
+
+Weighted mean over the stacked-cohort axis of flattened parameters:
+out[n] = sum_c w[c] * params[c, n]. The parameter axis is tiled so each
+program streams a (cohort, block_n) tile through VMEM and contracts it
+against the weight vector on the MXU — the server-side hot-spot when the
+cohort or model is large.
+
+VMEM per program at defaults (C<=64, block_n=16384, f32):
+  tile 64*16384*4 = 4 MB + out 64 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 16384
+
+
+def _fedavg_kernel(p_ref, w_ref, o_ref):
+    tile = p_ref[...]  # (C, bn)
+    w = w_ref[...]  # (C,)
+    o_ref[...] = jax.lax.dot_general(
+        w[None].astype(jnp.float32),
+        tile.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fedavg_reduce(
+    params: jnp.ndarray,  # (C, N) stacked flattened cohort params
+    weights: jnp.ndarray,  # (C,) normalized weights (sum to 1 over cohort)
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    C, N = params.shape
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        params = jnp.pad(params, ((0, 0), (0, pad)))
+    Np = params.shape[1]
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((C, bn), lambda i: (0, i)),
+            pl.BlockSpec((C,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), params.dtype),
+        interpret=interpret,
+    )(params, weights.astype(params.dtype))
+    return out[:N]

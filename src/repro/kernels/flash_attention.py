@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (GQA + causal / sliding-window / chunked).
+
+Grid: (batch, kv_head, q_blocks, k_blocks); the k_blocks axis is the
+innermost sequential ("arbitrary") dimension and carries the online-softmax
+state (m, l, acc) in VMEM scratch. Query blocks carry all G = H/Hk query
+heads of one kv head, so K/V tiles stream from HBM once per kv head (the
+GQA bandwidth win). MXU dims (block_q, block_k, head_dim) are multiples
+of 128 at the defaults.
+
+VMEM working set per program at defaults (bf16, D=128, G<=8):
+  q (G,256,128) + k/v 2x(512,128) + acc f32 (G,256,128) ~= 2.2 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, G, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    o_ref,  # (1, 1, G, bq, D)
+    m_scr,  # (G, bq) f32
+    l_scr,  # (G, bq) f32
+    acc_scr,  # (G, bq, D) f32
+    *,
+    scale: float,
+    kind: str,
+    window: int,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # (G, bq, D)
+    k = k_ref[0, 0]  # (bk, D)
+    v = v_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, bq, bk)
+    s = s * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos <= q_pos  # causal
+    if kind == "sliding" and window > 0:
+        mask &= k_pos > q_pos - window
+    elif kind == "chunked" and window > 0:
+        mask &= (k_pos // window) == (q_pos // window)
+    s = jnp.where(mask[None], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (G, bq, D)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hk, G, S, D)
+    k: jnp.ndarray,  # (B, Hk, S, D)
+    v: jnp.ndarray,  # (B, Hk, S, D)
+    *,
+    scale: float,
+    kind: str = "full",
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hk, G, S, D = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        kind=kind,
+        window=window,
+        block_q=bq,
+        block_k=bk,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hk, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, D), lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,123 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+The §Perf analysis of deepseek decode_32k identified fp32 score
+temporaries (B x H x L per layer) as the residual memory-term gap after
+MLA absorption. This kernel streams the cache through VMEM in blocks with
+online-softmax state in scratch, so scores never round-trip to HBM:
+grid (batch, kv_head, cache_blocks); the cache-block axis is sequential
+and carries (m, l, acc).
+
+Masking: slots beyond ``valid_len`` are ignored (ring caches pass the
+number of valid slots; position-dependent window masks are applied by the
+caller via valid_len because a warm ring holds exactly the window).
+
+VMEM per program at defaults (bf16, D=128, G<=16, block 1024):
+  k/v 2 x (1024,128) + acc f32 (G,128) ~= 0.6 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_L = 1024
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, 1, bl, D)
+    v_ref,  # (1, 1, bl, D)
+    vlen_ref,  # (1,) int32 — number of valid cache slots
+    o_ref,  # (1, 1, G, D)
+    m_scr,  # (G,) f32... stored as (G, 1)
+    l_scr,  # (G, 1)
+    acc_scr,  # (G, D)
+    *,
+    scale: float,
+    block_l: int,
+    num_blocks: int,
+):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # (G, D)
+    k = k_ref[0, 0]  # (bl, D)
+    v = v_ref[0, 0]
+    vlen = vlen_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bl)
+    slot = li * block_l + jax.lax.broadcasted_iota(jnp.int32, (1, block_l), 1)
+    s = jnp.where(slot < vlen, s, NEG_INF)
+
+    m_prev = m_scr[...][:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = (l_scr[...][:, 0] * alpha + p.sum(axis=-1))[:, None]
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new[:, None]
+
+    @pl.when(li == num_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...][:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_l", "interpret"))
+def flash_decode(
+    q: jnp.ndarray,  # (B, Hk, G, D) one token's queries
+    k: jnp.ndarray,  # (B, Hk, L, D) cache
+    v: jnp.ndarray,  # (B, Hk, L, D)
+    valid_len: jnp.ndarray,  # () or (B,) int32 valid slots
+    *,
+    scale: float,
+    block_l: int = DEFAULT_BLOCK_L,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hk, G, D = q.shape
+    L = k.shape[2]
+    bl = min(block_l, L)
+    pad = (-L) % bl
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Lp = k.shape[2]
+    nb = Lp // bl
+    vlen = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (B,))
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_l=bl, num_blocks=nb
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, l: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bl, D), lambda b, h, l: (b, h, l, 0)),
+            pl.BlockSpec((1, 1, bl, D), lambda b, h, l: (b, h, l, 0)),
+            pl.BlockSpec((1,), lambda b, h, l: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, l: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, vlen)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale, kind="full", window=0):
+    """q: (B,Hk,G,S,D); k/v: (B,Hk,S,D). Direct masked softmax attention."""
+    S = q.shape[3]
+    pos = jnp.arange(S)
+    qp, kp = pos[:, None], pos[None, :]
+    mask = kp <= qp
+    if kind == "sliding" and window > 0:
+        mask &= kp > qp - window
+    elif kind == "chunked" and window > 0:
+        mask &= (kp // window) == (qp // window)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(v.dtype), v)
+
+
+def ssd_scan_ref(x, dt, A, B_, C_):
+    """Naive per-step SSM recurrence (oracle). Shapes as kernels.ssd_scan."""
+    from repro.models.ssm import ssd_reference
+
+    y, _ = ssd_reference(x, dt, A, B_, C_)
+    return y.astype(x.dtype)
+
+
+def flash_decode_ref(q, k, v, valid_len, *, scale):
+    """q: (B,Hk,G,D); k/v: (B,Hk,L,D); one-token attention over the cache."""
+    L = k.shape[2]
+    s = jnp.einsum("bhgd,bhld->bhgl", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(L)[None] < jnp.broadcast_to(
+        jnp.asarray(valid_len), (q.shape[0],)
+    )[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgl,bhld->bhgd", w.astype(v.dtype), v)
+
+
+def fedavg_reduce_ref(params, weights):
+    """out[n] = sum_c w[c] p[c,n]."""
+    return jnp.einsum(
+        "c,cn->n", weights.astype(jnp.float32), params.astype(jnp.float32)
+    ).astype(params.dtype)
+
+
+def topk_ref(ages, k):
+    """Global top-k (values, indices) with highest-age-first order."""
+    vals, idx = jax.lax.top_k(ages.astype(jnp.float32), k)
+    return vals, idx

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: (batch, heads, num_chunks); the chunk axis is sequential and carries
+the (head_dim, d_state) SSM state in VMEM scratch. Each program computes
+the within-chunk dual (attention-like) term on the MXU plus the
+cross-chunk contribution of the carried state, then updates the state.
+
+VMEM per program at defaults (L=256, hd=64, ds=128, f32):
+  x (256,64) + B/C (256,128)x2 + scores (256,256) + state (64,128)
+  ~= 0.6 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, L, hd)   chunk of head inputs
+    dt_ref,  # (1, 1, L)
+    a_ref,  # (1,)            A for this head (negative)
+    b_ref,  # (1, L, ds)
+    c_ref,  # (1, L, ds)
+    y_ref,  # (1, 1, L, hd)
+    h_scr,  # (hd, ds) f32    carried state
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (L, hd)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (L,)
+    A = a_ref[0]
+    B = b_ref[0].astype(jnp.float32)  # (L, ds)
+    C = c_ref[0].astype(jnp.float32)  # (L, ds)
+
+    l = dt * A  # (L,) log-decay per step
+    cs = jnp.cumsum(l)  # inclusive
+    total = cs[-1]
+
+    # intra-chunk dual form
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cs[:, None] - cs[None, :])
+    scores = jnp.where(lj <= li, cb * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, hd)
+
+    # inter-chunk: contribution of carried state
+    ch = jax.lax.dot_general(C, h_scr[...], (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, hd)
+    y = y + jnp.exp(cs)[:, None] * ch
+
+    # state update: h' = exp(total) h + sum_j exp(total - cs_j) dt_j x_j B_j^T
+    w = jnp.exp(total - cs) * dt  # (L,)
+    xw = x * w[:, None]  # (L, hd)
+    h_new = jax.lax.dot_general(xw, B, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (hd, ds)
+    h_scr[...] = jnp.exp(total) * h_scr[...] + h_new
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,  # (B, S, nh, hd)
+    dt: jnp.ndarray,  # (B, S, nh)  post-softplus
+    A: jnp.ndarray,  # (nh,) negative
+    B_: jnp.ndarray,  # (B, S, ds)
+    C_: jnp.ndarray,  # (B, S, ds)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    Bb, S, nh, hd = x.shape
+    ds = B_.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    # layouts: head-major for per-(batch, head) programs
+    xr = x.transpose(0, 2, 1, 3)  # (B, nh, S, hd)
+    dtr = dt.transpose(0, 2, 1)  # (B, nh, S)
+
+    kernel = functools.partial(_ssd_kernel, chunk=L)
+    yr = pl.pallas_call(
+        kernel,
+        grid=(Bb, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, L, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, L, ds), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, hd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, nh, S, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, A.astype(jnp.float32), B_, C_)
+    return yr.transpose(0, 2, 1, 3)

@@ -1,0 +1,6 @@
+"""Launchers: production meshes, multi-pod dry-run, train/serve/fl_train.
+
+NOTE: importing ``repro.launch.dryrun`` sets XLA_FLAGS (512 host devices)
+as its first statement — import it only in a dedicated process.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,269 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the appropriate
+step (train / prefill / decode) against ShapeDtypeStruct inputs with the
+framework's sharding rules, compiles, and records memory_analysis(),
+cost_analysis() and the HLO collective schedule into a JSON artifact that
+benchmarks/bench_roofline.py and EXPERIMENTS.md consume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import sharding as shard_rules  # noqa: E402
+from repro.configs import INPUT_SHAPES, all_archs, get_arch, shape_applicable  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import factory  # noqa: E402
+from repro.roofline import collective_bytes_from_hlo, model_flops, roofline_terms  # noqa: E402
+from repro.roofline import hlo_cost  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts")
+
+
+def _params_sds(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def lower_pair(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    mla_absorb: bool = True,
+    seq_parallel: bool = False,
+    explicit_tp: bool = False,
+    remat_save_outputs: bool = False,
+    extra_tags: str = "",
+) -> Dict:
+    cfg = get_arch(arch_name)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {
+            "arch": arch_name, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skipped", "reason": why,
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = factory.build(
+        cfg, mla_absorb=mla_absorb, seq_parallel=seq_parallel,
+        explicit_tp=explicit_tp, remat_save_outputs=remat_save_outputs,
+    )
+    specs = factory.input_specs(cfg, shape)
+    p_sds = _params_sds(model)
+    p_spec = shard_rules.params_pspecs(p_sds, mesh)
+
+    t0 = time.time()
+    if shape.mode == "train":
+        b_spec = shard_rules.batch_pspecs(specs, mesh)
+        fn = lambda params, batch, lr: model.sgd_train_step(params, batch, lr)
+        in_sh = (_named(p_spec, mesh), _named(b_spec, mesh), None)
+        out_sh = (_named(p_spec, mesh), None)
+        args = (p_sds, specs, jax.ShapeDtypeStruct((), jnp.float32))
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    elif shape.mode == "prefill":
+        b_spec = shard_rules.batch_pspecs(specs, mesh)
+        if cfg.encoder is not None:
+            specs = dict(specs)
+            specs.pop("labels", None)
+            specs["seq_len"] = shape.seq_len
+            b_spec = shard_rules.batch_pspecs(
+                {k: v for k, v in specs.items() if k != "seq_len"}, mesh
+            )
+            fn = lambda params, batch: model.prefill(params, {**batch, "seq_len": shape.seq_len})
+            args = (p_sds, {k: v for k, v in specs.items() if k != "seq_len"})
+        else:
+            fn = lambda params, batch: model.prefill(params, batch)
+            args = (p_sds, specs)
+        in_sh = (_named(p_spec, mesh), _named(b_spec, mesh))
+        jitted = jax.jit(fn, in_shardings=in_sh)
+    else:  # decode
+        cache_sds = specs["caches"]
+        c_spec = shard_rules.cache_pspecs(cache_sds, mesh)
+        tok_spec = shard_rules.batch_pspecs({"token": specs["token"]}, mesh)["token"]
+        fn = lambda params, caches, token: model.decode_step(params, caches, token)
+        in_sh = (_named(p_spec, mesh), _named(c_spec, mesh), NamedSharding(mesh, tok_spec))
+        out_sh = (None, _named(c_spec, mesh))
+        args = (p_sds, cache_sds, specs["token"])
+        # donate the cache: serving updates it in place (without donation
+        # XLA copies the full stacked cache every scanned layer — §Perf)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(1,))
+
+    from repro.models import pshard
+
+    with mesh, pshard.mesh_context(mesh):
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_info[attr] = int(v)
+    cost = compiled.cost_analysis() or {}
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    # while-loop-aware HLO cost model (cost_analysis counts loop bodies
+    # once; see roofline/hlo_cost.py) — primary source for the roofline.
+    hc = hlo_cost.analyze(hlo)
+    flops = hc["flops"]
+    bytes_acc = hc["bytes"]
+    coll = {k: int(v) for k, v in hc["collectives"].items()}
+
+    # roofline
+    chips = 512 if multi_pod else 256
+    terms = roofline_terms(flops, bytes_acc, coll)
+    tokens = shape.global_batch * (shape.seq_len if shape.mode == "train" else 1)
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    n_params = cfg.active_param_count()
+    mf = model_flops(n_params, tokens, "train" if shape.mode == "train" else "serve")
+    useful = mf / (flops * chips) if flops else 0.0
+
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tags": extra_tags,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "raw_cost_analysis": {"flops": raw_flops, "bytes_accessed": raw_bytes},
+        "memory_analysis": mem_info,
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_global": mf,
+        "useful_flops_ratio": useful,
+        "params_total": cfg.param_count(),
+        "params_active": n_params,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-mla-absorb", action="store_true",
+                    help="naive MLA decode (roofline baseline)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel residual (Megatron SP; §Perf)")
+    ap.add_argument("--explicit-tp", action="store_true",
+                    help="shard_map MLP with explicit bf16 psum (§Perf)")
+    ap.add_argument("--remat-save-outputs", action="store_true",
+                    help="remat policy: save seq-sharded branch outputs so the "
+                         "backward replay skips forward matmuls + ARs (§Perf)")
+    ap.add_argument("--tags", default="")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out or ARTIFACT_DIR, exist_ok=True)
+    outdir = args.out or ARTIFACT_DIR
+
+    pairs = []
+    if args.all:
+        for a in sorted(all_archs()):
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        pairs.append((args.arch, args.shape))
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for a, s in pairs:
+        for mp in meshes:
+            tag = f"{a}.{s}.{'mp' if mp else 'sp'}"
+            if args.no_mla_absorb:
+                tag += ".noabsorb"
+            if args.seq_parallel:
+                tag += ".seqpar"
+            if args.explicit_tp:
+                tag += ".exptp"
+            if args.remat_save_outputs:
+                tag += ".rematout"
+            if args.tags:
+                tag += f".{args.tags}"  # keep tagged runs from clobbering baselines
+            print(f"=== {tag} ===", flush=True)
+            try:
+                r = lower_pair(a, s, mp, mla_absorb=not args.no_mla_absorb,
+                               seq_parallel=args.seq_parallel,
+                               explicit_tp=args.explicit_tp,
+                               remat_save_outputs=args.remat_save_outputs,
+                               extra_tags=args.tags or
+                               ("rematout" if args.remat_save_outputs else "") or
+                               ("seqpar" if args.seq_parallel else "") or
+                               ("exptp" if args.explicit_tp else "") or
+                               ("noabsorb" if args.no_mla_absorb else ""))
+            except Exception as e:
+                traceback.print_exc()
+                r = {"arch": a, "shape": s,
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "status": "error", "error": f"{type(e).__name__}: {e}"}
+            results.append(r)
+            fn = os.path.join(outdir, f"dryrun_{tag}.json")
+            with open(fn, "w") as f:
+                json.dump(r, f, indent=1)
+            if r["status"] == "ok":
+                rf = r["roofline"]
+                print(
+                    f"  ok: lower {r['lower_s']}s compile {r['compile_s']}s | "
+                    f"flops/dev {r['flops_per_device']:.3e} bytes/dev {r['bytes_per_device']:.3e} | "
+                    f"compute {rf['compute_s']*1e3:.2f}ms memory {rf['memory_s']*1e3:.2f}ms "
+                    f"collective {rf['collective_s']*1e3:.2f}ms -> {rf['dominant']}",
+                    flush=True,
+                )
+            else:
+                print(f"  {r['status']}: {r.get('reason', r.get('error',''))[:300]}", flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"DONE ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

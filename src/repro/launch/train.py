@@ -1,0 +1,92 @@
+"""Centralized LM training driver (~100M-class model for a few hundred
+steps on CPU; the same step function the dry-run lowers at production
+scale). Used by examples/train_lm.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.synthetic import make_token_stream
+from repro.models import factory
+from repro.optim.schedules import warmup_cosine
+from repro.checkpoint import save_checkpoint
+
+
+def build_sized(arch: str, target_params: float):
+    """Reduced variant scaled up toward ~target_params (CPU trainable)."""
+    cfg = get_arch(arch)
+    red = cfg.reduced()
+    # widen/deepen the reduced config until close to target
+    d = red.d_model
+    layers = 2
+    while True:
+        test = dataclasses.replace(red, d_model=d, vocab_size=min(cfg.vocab_size, 8192))
+        if test.param_count() * (layers / test.num_layers) >= target_params or d >= 1024:
+            break
+        d *= 2
+    return dataclasses.replace(red, d_model=d, vocab_size=min(cfg.vocab_size, 8192))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--target-params", type=float, default=20e6)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = build_sized(args.arch, args.target_params)
+    model = factory.build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n / 1e6:.1f}M layers={cfg.num_layers} d={cfg.d_model}")
+
+    stream = make_token_stream(cfg.vocab_size, args.steps * args.batch * (args.seq + 1) + 1)
+    lr_fn = warmup_cosine(args.lr, args.steps // 10, args.steps)
+    step_fn = jax.jit(model.sgd_train_step)
+
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        off = step * args.batch * (args.seq + 1)
+        chunk = stream[off : off + args.batch * (args.seq + 1)].reshape(
+            args.batch, args.seq + 1
+        )
+        batch = factory.synth_batch(key, cfg, args.batch, args.seq)
+        batch["tokens"] = jnp.asarray(chunk[:, :-1])
+        labels = jnp.asarray(chunk[:, 1:])
+        ft = cfg.frontend_tokens if cfg.frontend != "none" else 0
+        if ft:
+            labels = jnp.concatenate(
+                [-jnp.ones((args.batch, ft), jnp.int32), labels], axis=1
+            )
+        batch["labels"] = labels
+        params, metrics = step_fn(params, batch, lr_fn(jnp.asarray(step)))
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % args.log_every == 0:
+            rate = (step + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {step + 1:5d} loss {np.mean(losses[-args.log_every:]):.4f} "
+                  f"({rate:.0f} tok/s)", flush=True)
+    print(f"final loss {np.mean(losses[-10:]):.4f} (initial {np.mean(losses[:10]):.4f})")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print("checkpoint ->", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

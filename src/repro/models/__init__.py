@@ -1,0 +1,2 @@
+"""Model zoo: pattern-scan transformer, SSD, enc-dec, CNN, factory API."""
+from repro.models.factory import Model, build, input_specs, synth_batch  # noqa: F401

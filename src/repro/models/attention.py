@@ -1,0 +1,435 @@
+"""Attention layers: GQA/MHA, sliding-window / chunked variants, MLA
+(multi-head latent attention, deepseek-v2), with train/prefill and
+cached-decode paths.
+
+Long sequences use a flash-style blocked attention written in pure jnp
+(query-block vmap x key-block scan with online softmax) so the (S, S)
+score matrix never materializes; ``repro.kernels.flash_attention`` is the
+Pallas TPU version of the same schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionSpec
+from repro.models import pshard
+from repro.models.common import apply_rope, dense_init, rms_norm_headwise
+
+BLOCK_Q = 1024
+BLOCK_K = 1024
+FLASH_THRESHOLD = 2048  # use blocked attention above this seq length
+
+# When enabled (TPU deployments / kernel-integration tests), full-sequence
+# attention runs through the Pallas flash kernel instead of the jnp
+# blocked path. Positions must be 0..S-1 (train/prefill), S % 128 == 0.
+_USE_PALLAS_KERNEL = False
+
+
+def set_kernel_attention(enabled: bool) -> None:
+    global _USE_PALLAS_KERNEL
+    _USE_PALLAS_KERNEL = enabled
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, spec: AttentionSpec, dtype) -> Dict:
+    ks = jax.random.split(key, 10)
+    H, Hk, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    p: Dict = {}
+    if spec.is_mla:
+        r, dr = spec.kv_lora, spec.rope_dim
+        if spec.q_lora:
+            p["w_dq"] = dense_init(ks[0], (d_model, spec.q_lora), 0, dtype)
+            p["w_uq"] = dense_init(ks[1], (spec.q_lora, H, D + dr), 0, dtype)
+        else:
+            p["w_uq"] = dense_init(ks[1], (d_model, H, D + dr), 0, dtype)
+        p["w_dkv"] = dense_init(ks[2], (d_model, r), 0, dtype)
+        p["w_k_rope"] = dense_init(ks[3], (d_model, dr), 0, dtype)
+        p["w_uk"] = dense_init(ks[4], (r, H, D), 0, dtype)
+        p["w_uv"] = dense_init(ks[5], (r, H, D), 0, dtype)
+        p["w_o"] = dense_init(ks[6], (H, D, d_model), 0, dtype)
+    else:
+        p["w_q"] = dense_init(ks[0], (d_model, H, D), 0, dtype)
+        p["w_k"] = dense_init(ks[1], (d_model, Hk, D), 0, dtype)
+        p["w_v"] = dense_init(ks[2], (d_model, Hk, D), 0, dtype)
+        p["w_o"] = dense_init(ks[3], (H, D, d_model), 0, dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((D,), dtype)
+        p["k_norm"] = jnp.ones((D,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Mask helpers
+# ---------------------------------------------------------------------------
+
+
+def _pair_mask(spec: AttentionSpec, q_pos, k_pos):
+    """(..., Q, K) boolean validity from absolute positions."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), jnp.bool_)
+    if spec.causal:
+        ok &= k <= q
+    if spec.kind == "sliding" and spec.window > 0:
+        ok &= k > q - spec.window
+    elif spec.kind == "chunked" and spec.window > 0:
+        ok &= (k // spec.window) == (q // spec.window)
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Core grouped attention (q already (B, Hk, G, Sq, D))
+# ---------------------------------------------------------------------------
+
+
+def _attend_direct(q, k, v, mask, scale):
+    """Materialized-scores attention (short sequences / decode)."""
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(v.dtype), v)
+
+
+def _attend_flash_jnp(q, k, v, spec: AttentionSpec, q_pos, k_pos, scale):
+    """Blocked online-softmax attention; never materializes (Sq, Sk).
+    Supports distinct K and V head dims (MLA)."""
+    B, Hk, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    Dv = v.shape[-1]
+    bq = min(BLOCK_Q, Sq)
+    bk = min(BLOCK_K, Sk)
+    nq, nk = Sq // bq, Sk // bk
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+
+    qb = q.reshape(B, Hk, G, nq, bq, D).transpose(3, 0, 1, 2, 4, 5)  # (nq,B,Hk,G,bq,D)
+    qp = q_pos.reshape(nq, bq)
+    kb = k.reshape(B, Hk, nk, bk, D).transpose(2, 0, 1, 3, 4)  # (nk,B,Hk,bk,D)
+    vb = v.reshape(B, Hk, nk, bk, Dv).transpose(2, 0, 1, 3, 4)
+    kp = k_pos.reshape(nk, bk)
+
+    def per_qblock(q_i, qp_i):
+        m0 = jnp.full((B, Hk, G, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, bq, Dv), jnp.float32)
+
+        def body(carry, kv):
+            m, l, acc = carry
+            k_j, v_j, kp_j = kv
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_j).astype(jnp.float32) * scale
+            mask = _pair_mask(spec, qp_i, kp_j)  # (bq, bk)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kp))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.vmap(per_qblock)(qb, qp)  # (nq,B,Hk,G,bq,Dv)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hk, G, Sq, Dv)
+    return out
+
+
+def _grouped_attention(q, k, v, spec, q_pos, k_pos, scale, force_direct=False):
+    Sq, Sk = q.shape[3], k.shape[2]
+    if (
+        _USE_PALLAS_KERNEL
+        and not force_direct
+        and spec.causal
+        and Sq == Sk
+        and Sq % 128 == 0
+        and q.shape[-1] == k.shape[-1] == v.shape[-1]
+    ):
+        from repro.kernels import ops as kops
+
+        bq = min(BLOCK_Q, 128 if Sq <= 512 else 256)
+        bk = min(BLOCK_K, 128 if Sq <= 512 else 512)
+        return kops.flash_attention(
+            q, k, v, scale=scale, kind=spec.kind, window=spec.window,
+            block_q=bq, block_k=bk,
+        ).astype(v.dtype)
+    if force_direct or max(Sq, Sk) <= FLASH_THRESHOLD or Sq % 128 != 0:
+        mask = _pair_mask(spec, q_pos, k_pos)[None, None, None]
+        return _attend_direct(q, k, v, mask, scale)
+    return _attend_flash_jnp(q, k, v, spec, q_pos, k_pos, scale)
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention forward
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RopeTable:
+    inv_freq: jnp.ndarray
+    rot: int
+
+
+def _project_qkv(p, x, spec):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["w_v"])
+    if spec.qk_norm:
+        q = rms_norm_headwise(p["q_norm"], q)
+        k = rms_norm_headwise(p["k_norm"], k)
+    return q, k, v
+
+
+def attention_fwd(
+    p: Dict,
+    x: jnp.ndarray,  # (B, S, d)
+    spec: AttentionSpec,
+    rope: Optional[RopeTable],
+    positions: jnp.ndarray,  # (S,)
+) -> jnp.ndarray:
+    """Full-sequence (train / prefill) attention."""
+    if spec.is_mla:
+        return _mla_fwd(p, x, spec, rope, positions)
+    H, Hk, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G = H // Hk
+    q, k, v = _project_qkv(p, x, spec)
+    if spec.rope and rope is not None:
+        q = apply_rope(q, positions[None], rope.inv_freq, rope.rot)
+        k = apply_rope(k, positions[None], rope.inv_freq, rope.rot)
+    B, S = x.shape[0], x.shape[1]
+    # --- tensor-parallel strategy (see pshard) -----------------------------
+    # heads-sharded when kv heads divide the model axis; else repeat kv to
+    # full MHA when q heads divide; else shard the query sequence (context
+    # parallel). Degrades to no-op without a mesh.
+    tp = pshard.axis_size("model")
+    dpax = pshard.dp()
+    if tp > 1 and Hk % tp != 0 and H % tp == 0:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        Hk_eff, G_eff = H, 1
+    else:
+        Hk_eff, G_eff = Hk, G
+    qg = q.reshape(B, S, Hk_eff, G_eff, D).transpose(0, 2, 3, 1, 4)  # (B,Hk,G,S,D)
+    kg = k.transpose(0, 2, 1, 3)  # (B,Hk,S,D)
+    vg = v.transpose(0, 2, 1, 3)
+    if tp > 1:
+        if Hk_eff % tp == 0:
+            qg = pshard.constrain(qg, dpax, "model", None, None, None)
+            kg = pshard.constrain(kg, dpax, "model", None, None)
+            vg = pshard.constrain(vg, dpax, "model", None, None)
+        else:  # context-parallel queries (e.g. llama4's 40 heads)
+            qg = pshard.constrain(qg, dpax, None, None, "model", None)
+            kg = pshard.constrain(kg, dpax, None, None, None)
+            vg = pshard.constrain(vg, dpax, None, None, None)
+    scale = spec.softmax_scale or (1.0 / D**0.5)
+    out = _grouped_attention(qg, kg, vg, spec, positions, positions, scale)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(x.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, p["w_o"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(spec: AttentionSpec, batch: int, seq_len: int, dtype) -> Dict:
+    """Cache sized for a context of ``seq_len`` (bounded by window/chunk)."""
+    L = spec.cache_len(seq_len)
+    if spec.is_mla:
+        return {
+            "c_kv": jnp.zeros((batch, L, spec.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, L, spec.rope_dim), dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, L, spec.num_kv_heads, spec.head_dim), dtype),
+        "v": jnp.zeros((batch, L, spec.num_kv_heads, spec.head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _slot_positions(spec: AttentionSpec, L: int, index):
+    """Absolute position held in each ring slot when writing at ``index``.
+
+    Slot s holds the newest position p <= index with p == s (mod L);
+    the slot being written now holds ``index`` itself.
+    """
+    s = jnp.arange(L)
+    return index - ((index - s) % L)
+
+
+def _slot_valid(spec: AttentionSpec, slot_pos, index):
+    ok = (slot_pos >= 0) & (slot_pos <= index)
+    if spec.kind == "sliding" and spec.window > 0:
+        ok &= slot_pos > index - spec.window
+    elif spec.kind == "chunked" and spec.window > 0:
+        ok &= (slot_pos // spec.window) == (index // spec.window)
+    return ok
+
+
+def attention_decode(
+    p: Dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    spec: AttentionSpec,
+    rope: Optional[RopeTable],
+    cache: Dict,
+    mla_absorb: bool = True,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token decode with ring-buffer cache update."""
+    if spec.is_mla:
+        return _mla_decode(p, x, spec, rope, cache, absorb=mla_absorb)
+    H, Hk, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G = H // Hk
+    B = x.shape[0]
+    index = cache["index"]
+    L = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, spec)
+    pos = index[None]  # (1,)
+    if spec.rope and rope is not None:
+        q = apply_rope(q, pos[None], rope.inv_freq, rope.rot)
+        k = apply_rope(k, pos[None], rope.inv_freq, rope.rot)
+    slot = index % L
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    slot_pos = _slot_positions(spec, L, index)
+    valid = _slot_valid(spec, slot_pos, index)
+    qg = q.reshape(B, 1, Hk, G, D).transpose(0, 2, 3, 1, 4)  # (B,Hk,G,1,D)
+    kg = k_cache.transpose(0, 2, 1, 3)
+    vg = v_cache.transpose(0, 2, 1, 3)
+    scale = spec.softmax_scale or (1.0 / D**0.5)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kg).astype(jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(vg.dtype), vg)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D).astype(x.dtype)
+    y = jnp.einsum("bshe,hed->bsd", out, p["w_o"])
+    return y, {"k": k_cache, "v": v_cache, "index": index + 1}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(p, x, spec, rope, positions):
+    H, D, dr = spec.num_heads, spec.head_dim, spec.rope_dim
+    if spec.q_lora:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+        q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])  # (B,S,H,D+dr)
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["w_uq"])
+    q_nope, q_rope = q[..., :D], q[..., D:]
+    if rope is not None:
+        q_rope = apply_rope(q_rope, positions[None], rope.inv_freq, rope.rot)
+    return q_nope, q_rope
+
+
+def _mla_fwd(p, x, spec, rope, positions):
+    """Prefill/train MLA: decompress K/V and run standard attention (MHA)."""
+    B, S, _ = x.shape
+    H, D, dr, r = spec.num_heads, spec.head_dim, spec.rope_dim, spec.kv_lora
+    q_nope, q_rope = _mla_q(p, x, spec, rope, positions)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    k_rope = jnp.einsum("bsd,de->bse", x, p["w_k_rope"])  # single shared head
+    if rope is not None:
+        k_rope = apply_rope(k_rope[:, :, None, :], positions[None], rope.inv_freq, rope.rot)[
+            :, :, 0
+        ]
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])
+    # fold shared rope head into per-head keys; MHA (G=1, Hk=H)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))], axis=-1)
+    scale = spec.softmax_scale or (1.0 / (D + dr) ** 0.5)
+    qg = q.transpose(0, 2, 1, 3)[:, :, None]  # (B,H,1,S,D+dr)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    dpax = pshard.dp()
+    qg = pshard.constrain(qg, dpax, "model", None, None, None)
+    kg = pshard.constrain(kg, dpax, "model", None, None)
+    vg = pshard.constrain(vg, dpax, "model", None, None)
+    out = _grouped_attention(qg, kg, vg, spec, positions, positions, scale)
+    out = out[:, :, 0].transpose(0, 2, 1, 3).astype(x.dtype)  # (B,S,H,D)
+    return jnp.einsum("bshe,hed->bsd", out, p["w_o"])
+
+
+def _mla_decode(p, x, spec, rope, cache, absorb: bool):
+    """Cached decode against the *compressed* latent cache.
+
+    absorb=True uses the matrix-absorption identity: scores over the latent
+    cache directly via q' = q @ W_uk (per head), and output via
+    (w @ c_kv) @ W_uv — O(L*r) per head instead of decompressing O(L*H*D)
+    keys/values every step.  absorb=False is the naive (paper-orderd)
+    decompression path, kept as the roofline baseline.
+    """
+    B = x.shape[0]
+    H, D, dr, r = spec.num_heads, spec.head_dim, spec.rope_dim, spec.kv_lora
+    index = cache["index"]
+    L = cache["c_kv"].shape[1]
+    pos = index[None]
+    q_nope, q_rope = _mla_q(p, x, spec, rope, pos)  # (B,1,H,D), (B,1,H,dr)
+    c_new = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    kr_new = jnp.einsum("bsd,de->bse", x, p["w_k_rope"])
+    if rope is not None:
+        kr_new = apply_rope(kr_new[:, :, None, :], pos[None], rope.inv_freq, rope.rot)[:, :, 0]
+    slot = index % L
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, slot, 0))
+    slot_pos = _slot_positions(spec, L, index)
+    valid = (slot_pos >= 0) & (slot_pos <= index)
+    scale = spec.softmax_scale or (1.0 / (D + dr) ** 0.5)
+    if absorb:
+        qc = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])  # (B,1,H,r)
+        s = jnp.einsum("bshr,blr->bhsl", qc, c_kv)
+        s = s + jnp.einsum("bshe,ble->bhsl", q_rope, k_rope)
+        s = jnp.where(valid[None, None, None], s.astype(jnp.float32) * scale, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        wc = jnp.einsum("bhsl,blr->bshr", w.astype(c_kv.dtype), c_kv)
+        out = jnp.einsum("bshr,rhe->bshe", wc, p["w_uv"])  # (B,1,H,D)
+    else:
+        k_nope = jnp.einsum("blr,rhe->blhe", c_kv, p["w_uk"])  # (B,L,H,D)
+        v = jnp.einsum("blr,rhe->blhe", c_kv, p["w_uv"])
+        s = jnp.einsum("bshe,blhe->bhsl", q_nope, k_nope)
+        s = s + jnp.einsum("bshe,ble->bhsl", q_rope, k_rope)
+        s = jnp.where(valid[None, None, None], s.astype(jnp.float32) * scale, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhsl,blhe->bshe", w.astype(v.dtype), v)
+    y = jnp.einsum("bshe,hed->bsd", out.astype(x.dtype), p["w_o"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "index": index + 1}
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional / cross attention (whisper encoder & decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, d_model: int, spec: AttentionSpec, dtype) -> Dict:
+    return init_attention(key, d_model, spec, dtype)
+
+
+def cross_attention_fwd(p, x, kv_src, spec: AttentionSpec):
+    """Decoder->encoder cross attention; kv_src: (B, T, d); no masking."""
+    H, Hk, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G = H // Hk
+    B, S = x.shape[0], x.shape[1]
+    T = kv_src.shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", kv_src, p["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_src, p["w_v"])
+    qg = q.reshape(B, S, Hk, G, D).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    scale = 1.0 / D**0.5
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kg).astype(jnp.float32) * scale
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(vg.dtype), vg)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(x.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, p["w_o"])

@@ -1,0 +1,70 @@
+"""The paper's simulation model: CNN of McMahan et al. [1].
+
+Two 5x5 conv layers (32, 64 channels) each followed by 2x2 max-pool, a
+512-unit fully-connected layer, and a softmax output — exactly the model
+used for the MNIST/CIFAR convergence experiments (paper Sec. IV).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CNNConfig
+
+
+def init_params(key, cfg: CNNConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    c1, c2 = cfg.conv_channels
+    kk = cfg.kernel
+    # output spatial size after two stride-2 pools with SAME conv
+    s = cfg.image_size // 4
+    flat = s * s * c2
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape) * (2.0 / fan_in) ** 0.5
+
+    return {
+        "conv1": {
+            "w": he(ks[0], (kk, kk, cfg.channels, c1), kk * kk * cfg.channels),
+            "b": jnp.zeros((c1,)),
+        },
+        "conv2": {"w": he(ks[1], (kk, kk, c1, c2), kk * kk * c1), "b": jnp.zeros((c2,))},
+        "fc1": {"w": he(ks[2], (flat, cfg.fc_width), flat), "b": jnp.zeros((cfg.fc_width,))},
+        "fc2": {
+            "w": he(ks[3], (cfg.fc_width, cfg.num_classes), cfg.fc_width),
+            "b": jnp.zeros((cfg.num_classes,)),
+        },
+    }
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(params: Dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, H, W, C) -> logits (B, classes)."""
+    x = _pool(jax.nn.relu(_conv(images, params["conv1"])))
+    x = _pool(jax.nn.relu(_conv(x, params["conv2"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_and_acc(params: Dict, images, labels):
+    logits = forward(params, images)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, acc

@@ -1,0 +1,107 @@
+"""Shared layer primitives: norms, RoPE, initializers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Scaled normal (fan-in) initializer."""
+    fan_in = np.prod([shape[i] for i in range(len(shape)) if i <= in_axis]) if False else shape[in_axis]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(params, x, kind: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(scale, x, eps: float = 1e-6):
+    """RMSNorm over the last (head) dim — gemma3 qk-norm."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, rope_frac: float = 1.0):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * rope_frac) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return jnp.asarray(inv, jnp.float32), rot
+
+
+def apply_rope(x, positions, inv_freq, rot: int):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv_freq  # (...,S,1,rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoid_positions(length: int, d_model: int):
+    """Whisper-style fixed sinusoidal embedding table."""
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    ang = pos / (10000.0 ** (dim / max(d_model // 2 - 1, 1)))
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, jnp.float32)
+
+
+def sinusoid_at(pos, d_model: int):
+    """Sinusoidal embedding at (dynamic) integer position(s). pos: ()->(d,)"""
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000.0 ** (dim / max(d_model // 2 - 1, 1)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]

@@ -1,0 +1,229 @@
+"""Uniform model API over all assigned architectures.
+
+    model = build(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)
+    new_params, metrics = model.sgd_train_step(params, batch, lr)
+    logits, caches = model.prefill(params, batch)
+    logits, caches = model.decode_step(params, caches, token)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step the shape exercises (train/prefill/decode) — the dry-run
+lowers against these without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.common import dtype_of
+
+MOE_AUX_WEIGHT = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable  # (params, batch) -> (scalar, metrics)
+    sgd_train_step: Callable  # (params, batch, lr) -> (params, metrics)
+    prefill: Callable  # (params, batch) -> (logits, caches)
+    decode_step: Callable  # (params, caches, token) -> (logits, caches)
+    init_decode_caches: Callable  # (batch, seq_len) -> caches pytree
+
+
+def _vocab_chunk(cfg: ArchConfig, seq_len: int) -> int:
+    return 512 if cfg.vocab_size * seq_len > 2**27 else 0
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only family
+# ---------------------------------------------------------------------------
+
+
+def _build_decoder(
+    cfg: ArchConfig,
+    mla_absorb: bool = True,
+    remat: bool = True,
+    seq_parallel: bool = False,
+    explicit_tp: bool = False,
+    remat_save_outputs: bool = False,
+) -> Model:
+    def init(key):
+        return transformer.init_params(key, cfg)
+
+    def loss(params, batch):
+        tokens = batch["tokens"]
+        extra = batch.get("frontend")
+        x, aux, _ = transformer.forward(
+            params, cfg, tokens, extra_embeds=extra, mode="train", remat=remat,
+            seq_shard=seq_parallel, explicit_tp=explicit_tp,
+            remat_save_outputs=remat_save_outputs,
+        )
+        ce = transformer.lm_loss(
+            params, cfg, x, batch["labels"], vocab_chunk=_vocab_chunk(cfg, x.shape[1])
+        )
+        total = ce + MOE_AUX_WEIGHT * aux
+        return total, {"loss": ce, "moe_aux": aux}
+
+    def sgd_train_step(params, batch, lr):
+        (total, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        new_params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype), params, grads
+        )
+        return new_params, {**metrics, "total_loss": total}
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        extra = batch.get("frontend")
+        x, _, caches = transformer.forward(
+            params, cfg, tokens, extra_embeds=extra, mode="prefill", remat=False,
+            seq_shard=seq_parallel,
+        )
+        logits = transformer.unembed(params, cfg, x[:, -1:])
+        return logits, caches
+
+    def decode_step(params, caches, token):
+        return transformer.decode_step(params, cfg, caches, token, mla_absorb=mla_absorb)
+
+    def init_decode_caches(batch, seq_len):
+        return transformer.init_decode_caches(cfg, batch, seq_len)
+
+    return Model(cfg, init, loss, sgd_train_step, prefill, decode_step, init_decode_caches)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder family (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _build_encdec(cfg: ArchConfig) -> Model:
+    def init(key):
+        return encdec.init_params(key, cfg)
+
+    def loss(params, batch):
+        memory = encdec.encode(params, cfg, batch["frames"])
+        x = encdec.decode_train(params, cfg, memory, batch["tokens"])
+        ce = transformer.lm_loss(
+            {"embed": params["embed"]},
+            dataclasses.replace(cfg, tie_embeddings=True),
+            x,
+            batch["labels"],
+            vocab_chunk=_vocab_chunk(cfg, x.shape[1]),
+        )
+        return ce, {"loss": ce, "moe_aux": jnp.zeros(())}
+
+    def sgd_train_step(params, batch, lr):
+        (total, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        new_params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype), params, grads
+        )
+        return new_params, {**metrics, "total_loss": total}
+
+    def prefill(params, batch):
+        memory = encdec.encode(params, cfg, batch["frames"])
+        x = encdec.decode_train(params, cfg, memory, batch["tokens"])
+        caches = encdec.init_decode_caches(cfg, batch["tokens"].shape[0], batch["seq_len"])
+        ck, cv = encdec.precompute_cross(params, cfg, memory)
+        caches = {**caches, "cross_k": ck, "cross_v": cv}
+        logits = encdec.unembed(params, x[:, -1:])
+        return logits, caches
+
+    def decode_step(params, caches, token):
+        return encdec.decode_step(params, cfg, caches, token)
+
+    def init_decode_caches(batch, seq_len):
+        return encdec.init_decode_caches(cfg, batch, seq_len)
+
+    return Model(cfg, init, loss, sgd_train_step, prefill, decode_step, init_decode_caches)
+
+
+def build(
+    cfg: ArchConfig,
+    mla_absorb: bool = True,
+    remat: bool = True,
+    seq_parallel: bool = False,
+    explicit_tp: bool = False,
+    remat_save_outputs: bool = False,
+) -> Model:
+    if cfg.encoder is not None:
+        return _build_encdec(cfg)
+    return _build_decoder(
+        cfg, mla_absorb=mla_absorb, remat=remat, seq_parallel=seq_parallel,
+        explicit_tp=explicit_tp, remat_save_outputs=remat_save_outputs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """Stand-ins for every model input of the step this shape lowers."""
+    B, S = shape.global_batch, shape.seq_len
+    cdtype = dtype_of(cfg.compute_dtype)
+    i32 = jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.encoder is not None:  # whisper
+        if shape.mode in ("train", "prefill"):
+            return {
+                "frames": sds((B, cfg.encoder.source_len, cfg.d_model), cdtype),
+                "tokens": sds((B, S), i32),
+                "labels": sds((B, S), i32),
+            }
+        caches = jax.eval_shape(
+            lambda: encdec.init_decode_caches(cfg, B, S)
+        )
+        return {"caches": caches, "token": sds((B, 1), i32)}
+
+    if shape.mode in ("train", "prefill"):
+        s_text = S - (cfg.frontend_tokens if cfg.frontend != "none" else 0)
+        batch = {
+            "tokens": sds((B, s_text), i32),
+            "labels": sds((B, S), i32),
+        }
+        if cfg.frontend != "none":
+            batch["frontend"] = sds((B, cfg.frontend_tokens, cfg.d_model), cdtype)
+        if shape.mode == "prefill":
+            batch.pop("labels")
+        return batch
+
+    # decode
+    caches = jax.eval_shape(lambda: transformer.init_decode_caches(cfg, B, S))
+    return {"caches": caches, "token": sds((B, 1), i32)}
+
+
+def synth_batch(key, cfg: ArchConfig, batch: int, seq_len: int) -> Dict:
+    """Random concrete batch matching input_specs (for smoke tests)."""
+    cdtype = dtype_of(cfg.compute_dtype)
+    k1, k2 = jax.random.split(key)
+    if cfg.encoder is not None:
+        return {
+            "frames": jax.random.normal(k2, (batch, cfg.encoder.source_len, cfg.d_model), cdtype),
+            "tokens": jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size),
+        }
+    ft = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    s_text = seq_len - ft
+    out = {
+        "tokens": jax.random.randint(k1, (batch, s_text), 0, cfg.vocab_size),
+        "labels": jnp.concatenate(
+            [
+                -jnp.ones((batch, ft), jnp.int32),
+                jax.random.randint(k1, (batch, s_text), 0, cfg.vocab_size),
+            ],
+            axis=1,
+        ),
+    }
+    if ft:
+        out["frontend"] = jax.random.normal(k2, (batch, ft, cfg.d_model), cdtype)
+    return out

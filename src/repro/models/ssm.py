@@ -1,0 +1,209 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Train/prefill uses the chunked dual form: quadratic attention-like compute
+within chunks of length ``chunk`` + a linear recurrence across chunks
+(`lax.scan` carrying the (heads, head_dim, d_state) state). Decode is the
+O(1) single-step recurrence. ``repro.kernels.ssd_scan`` is the Pallas TPU
+kernel of the same chunked schedule; this module is its reference
+semantics (shared with kernels/ref.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMSpec
+from repro.models import pshard
+from repro.models.common import dense_init
+
+
+def init_ssm(key, d_model: int, spec: SSMSpec, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    di, ds, nh = spec.d_inner, spec.d_state, spec.num_heads
+    conv_ch = di + 2 * ds
+    return {
+        # in_proj -> [z (di), x (di), B (ds), C (ds), dt (nh)]
+        "w_in": dense_init(ks[0], (d_model, 2 * di + 2 * ds + nh), 0, dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.conv_width, conv_ch)) * 0.1).astype(
+            dtype
+        ),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.full((nh,), np.log(np.expm1(0.01)), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[2], (di, d_model), 0, dtype),
+    }
+
+
+def _split_in(p, x, spec: SSMSpec):
+    di, ds, nh = spec.d_inner, spec.d_state, spec.num_heads
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * ds]
+    dt_raw = proj[..., di + di + 2 * ds :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc, spec: SSMSpec):
+    """Depthwise causal conv via shifted adds (width is tiny)."""
+    w = p["conv_w"]  # (W, ch)
+    W = w.shape[0]
+    out = xbc * w[W - 1]
+    for i in range(W - 1):
+        shift = W - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _gated_norm(p, y, z, eps=1e-5):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps)).astype(y.dtype) * p["norm_scale"]
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, nh, hd)
+    dt: jnp.ndarray,  # (B, S, nh)  post-softplus
+    A: jnp.ndarray,  # (nh,) negative
+    B_: jnp.ndarray,  # (B, S, ds)
+    C_: jnp.ndarray,  # (B, S, ds)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,  # (B, nh, hd, ds)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,nh,hd), h_final)."""
+    Bb, S, nh, hd = x.shape
+    ds = B_.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    xr = x.reshape(Bb, nc, L, nh, hd).transpose(1, 0, 2, 3, 4)  # (nc,B,L,nh,hd)
+    dtr = dt.reshape(Bb, nc, L, nh).transpose(1, 0, 2, 3)
+    Br = B_.reshape(Bb, nc, L, ds).transpose(1, 0, 2, 3)
+    Cr = C_.reshape(Bb, nc, L, ds).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, nh, hd, ds), jnp.float32)
+
+    mask = jnp.tril(jnp.ones((L, L), jnp.bool_))
+
+    def per_chunk(h, inp):
+        xc, dtc, Bc, Cc = inp  # (B,L,nh,hd) (B,L,nh) (B,L,ds) (B,L,ds)
+        l = dtc.astype(jnp.float32) * A  # (B,L,nh), negative
+        cs = jnp.cumsum(l, axis=1)  # inclusive
+        total = cs[:, -1]  # (B,nh)
+        # intra-chunk (dual / attention-like) term
+        cb = jnp.einsum("bin,bjn->bij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+        decay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B,i,j,nh)
+        scores = cb[..., None] * decay * dtc[:, None, :, :]  # (B,i,j,nh)
+        scores = jnp.where(mask[None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xc.astype(jnp.float32))
+        # inter-chunk term from carried state
+        y_inter = jnp.exp(cs)[:, :, :, None] * jnp.einsum(
+            "bin,bhpn->bihp", Cc.astype(jnp.float32), h
+        )
+        # state update
+        w = jnp.exp(total[:, None, :] - cs) * dtc  # (B,L,nh)
+        h_chunk = jnp.einsum("blh,blhp,bln->bhpn", w, xc.astype(jnp.float32), Bc.astype(jnp.float32))
+        h_new = jnp.exp(total)[:, :, None, None] * h + h_chunk
+        return h_new, y_intra + y_inter
+
+    h_final, yr = jax.lax.scan(per_chunk, h0, (xr, dtr, Br, Cr))
+    y = yr.transpose(1, 0, 2, 3, 4).reshape(Bb, S, nh, hd)
+    return y, h_final
+
+
+def ssd_reference(x, dt, A, B_, C_, h0=None):
+    """Naive step-by-step recurrence (oracle for tests)."""
+    Bb, S, nh, hd = x.shape
+    ds = B_.shape[-1]
+    h = jnp.zeros((Bb, nh, hd, ds), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,nh,hd) (B,nh) (B,ds) (B,ds)
+        a = jnp.exp(dtt.astype(jnp.float32) * A)  # (B,nh)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt.astype(jnp.float32), xt.astype(jnp.float32), Bt.astype(jnp.float32))
+        h = a[:, :, None, None] * h + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), h)
+        return h, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        B_.transpose(1, 0, 2),
+        C_.transpose(1, 0, 2),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def ssm_fwd(
+    p: Dict, x: jnp.ndarray, spec: SSMSpec, h0=None, return_state: bool = False
+):
+    """Full-sequence mamba2 block. x: (B,S,d_model)."""
+    di, ds, nh, hd = spec.d_inner, spec.d_state, spec.num_heads, spec.head_dim
+    z, xbc, dt_raw = _split_in(p, x, spec)
+    dpax = pshard.dp()
+    z = pshard.constrain(z, dpax, None, "model")
+    # depthwise conv: channel-sharded is fine (no cross-channel mixing)
+    xbc = pshard.constrain(xbc, dpax, None, "model")
+    xbc = _causal_conv(p, xbc, spec)
+    xin = xbc[..., :di]
+    B_ = xbc[..., di : di + ds]
+    C_ = xbc[..., di + ds :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(*xin.shape[:2], nh, hd)
+    xh = pshard.constrain(xh, dpax, None, "model", None)  # head parallel
+    dt = pshard.constrain(dt, dpax, None, "model")
+    y, h = ssd_chunked(xh, dt, A, B_, C_, spec.chunk, h0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", _gated_norm(p, y, z), p["w_out"])
+    if return_state:
+        return out, h
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) recurrence)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(spec: SSMSpec, batch: int, dtype) -> Dict:
+    conv_ch = spec.d_inner + 2 * spec.d_state
+    return {
+        "h": jnp.zeros((batch, spec.num_heads, spec.head_dim, spec.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode(p: Dict, x: jnp.ndarray, spec: SSMSpec, cache: Dict):
+    """x: (B, 1, d_model) -> (y, cache)."""
+    di, ds, nh, hd = spec.d_inner, spec.d_state, spec.num_heads, spec.head_dim
+    z, xbc, dt_raw = _split_in(p, x, spec)  # (B,1,·)
+    # conv over [cache, current]
+    w = p["conv_w"]
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None]  # (B,1,ch)
+    xin = xbc1[..., :di]
+    B_ = xbc1[..., di : di + ds][:, 0]
+    C_ = xbc1[..., di + ds :][:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(x.shape[0], nh, hd)
+    a = jnp.exp(dt * A)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32), B_.astype(jnp.float32))
+    h = a[:, :, None, None] * cache["h"] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", _gated_norm(p, y, z), p["w_out"])
+    return out, {"h": h, "conv": hist[:, 1:]}

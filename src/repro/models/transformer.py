@@ -1,0 +1,464 @@
+"""Pattern-scan decoder transformer.
+
+An ``ArchConfig`` describes layers as ``prefix + pattern*repeats +
+remainder``.  The repeated pattern is executed with ``jax.lax.scan`` over
+stacked parameters (HLO size O(|pattern|), not O(layers)); prefix/remainder
+are unrolled. This one stack expresses every assigned decoder arch: dense
+GQA (llama/tinyllama/stablelm/pixtral), local:global interleave (gemma3),
+chunked:global + MoE interleave (llama4), MLA+MoE (deepseek-v2),
+mamba:attention hybrid (jamba), and pure SSD (mamba2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import pshard
+from repro.models import ssm as ssm_mod
+from repro.models.attention import RopeTable
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_norm,
+    rope_frequencies,
+)
+
+
+# ---------------------------------------------------------------------------
+# Rope tables
+# ---------------------------------------------------------------------------
+
+
+def build_ropes(cfg: ArchConfig) -> Dict[str, RopeTable]:
+    tables = {}
+    specs = [s.attn for s in cfg.all_layers() if s.attn is not None]
+    if not specs:
+        return tables
+    a = specs[0]
+    inv, rot = rope_frequencies(a.head_dim, cfg.rope_theta, a.rope_frac)
+    tables["global"] = RopeTable(inv, rot)
+    if cfg.rope_theta_local:
+        inv_l, rot_l = rope_frequencies(a.head_dim, cfg.rope_theta_local, a.rope_frac)
+        tables["local"] = RopeTable(inv_l, rot_l)
+    mla = [s for s in specs if s.is_mla]
+    if mla:
+        inv_m, rot_m = rope_frequencies(mla[0].rope_dim, cfg.rope_theta, 1.0)
+        tables["mla"] = RopeTable(inv_m, rot_m)
+    return tables
+
+
+def _rope_for(cfg: ArchConfig, spec: LayerSpec, ropes) -> Optional[RopeTable]:
+    a = spec.attn
+    if a is None or not a.rope and not a.is_mla:
+        return None
+    if a.is_mla:
+        return ropes.get("mla")
+    if not a.rope:
+        return None
+    if a.kind == "sliding" and "local" in ropes:
+        return ropes["local"]
+    return ropes.get("global")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec) -> Dict:
+    ks = jax.random.split(key, 4)
+    dtype = dtype_of(cfg.param_dtype)
+    p: Dict = {"ln1": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if spec.kind == "attn":
+        p["attn"] = attn_mod.init_attention(ks[0], cfg.d_model, spec.attn, dtype)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg.d_model, spec.ssm, dtype)
+    if spec.mlp.kind != "none":
+        p["ln2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        if spec.mlp.kind == "dense":
+            p["mlp"] = mlp_mod.init_mlp(ks[1], cfg.d_model, spec.mlp, dtype)
+        else:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, spec.mlp.moe, dtype)
+    return p
+
+
+def apply_layer(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    ropes,
+    positions,
+    mode: str,
+    cache: Optional[Dict] = None,
+    mla_absorb: bool = True,
+    seq_shard: bool = False,
+    explicit_tp: bool = False,
+    name_outputs: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x, new_cache, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if mode != "decode":
+        # residual stream: optionally Megatron-style sequence-parallel —
+        # sharded over ("model", sequence) between layers so the per-layer
+        # boundary collective is a reduce-scatter + all-gather pair instead
+        # of a full all-reduce (§Perf iteration; see EXPERIMENTS.md).
+        if seq_shard:
+            x = pshard.constrain(x, pshard.dp(), "model", None)
+        else:
+            x = pshard.constrain(x, pshard.dp(), None, None)
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    rope = _rope_for(cfg, spec, ropes)
+    new_cache = cache
+    if spec.kind == "attn":
+        if mode == "decode":
+            y, new_cache = attn_mod.attention_decode(
+                p["attn"], h, spec.attn, rope, cache, mla_absorb=mla_absorb
+            )
+        else:
+            y = attn_mod.attention_fwd(p["attn"], h, spec.attn, rope, positions)
+            if mode == "prefill":
+                new_cache = _write_prefill_cache(p["attn"], h, spec, rope, positions)
+    else:
+        if mode == "decode":
+            y, new_cache = ssm_mod.ssm_decode(p["ssm"], h, spec.ssm, cache)
+        elif mode == "prefill":
+            y, hstate, conv_tail = _ssm_prefill(p["ssm"], h, spec)
+            new_cache = {"h": hstate, "conv": conv_tail}
+        else:
+            y = ssm_mod.ssm_fwd(p["ssm"], h, spec.ssm)
+    if name_outputs and mode == "train":
+        # sequence-shard the saved branch output so the remat residual is
+        # 1/TP-sized, then mark it saveable: the backward replay reuses it
+        # instead of re-running the branch matmuls AND their all-reduces
+        y = pshard.constrain(y, pshard.dp(), "model", None)
+        y = checkpoint_name(y, "branch_out")
+    x = x + y
+    if spec.mlp.kind != "none":
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        if spec.mlp.kind == "dense":
+            y = mlp_mod.mlp_fwd(
+                p["mlp"], h, spec.mlp,
+                explicit_tp=explicit_tp and mode != "decode",
+            )
+        else:
+            y, metrics = moe_mod.moe_fwd(p["moe"], h, spec.mlp.moe)
+            aux = metrics["aux_loss"]
+        if name_outputs and mode == "train":
+            y = pshard.constrain(y, pshard.dp(), "model", None)
+            y = checkpoint_name(y, "branch_out")
+        x = x + y
+    return x, new_cache, aux
+
+
+# --- prefill-cache writers --------------------------------------------------
+
+
+def _write_prefill_cache(p, h, spec: LayerSpec, rope, positions):
+    """Compute K/V (or latents) for the whole prompt and lay them out in
+    ring order so decode can continue."""
+    a = spec.attn
+    S = h.shape[1]
+    L = a.cache_len(S)
+    if a.is_mla:
+        c_kv = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+        k_rope = jnp.einsum("bsd,de->bse", h, p["w_k_rope"])
+        if rope is not None:
+            k_rope = attn_mod.apply_rope(
+                k_rope[:, :, None, :], positions[None], rope.inv_freq, rope.rot
+            )[:, :, 0]
+        c_kv, k_rope = (_ring_layout(t, L) for t in (c_kv, k_rope))
+        return {"c_kv": c_kv, "k_rope": k_rope, "index": jnp.asarray(S, jnp.int32)}
+    k = jnp.einsum("bsd,dhe->bshe", h, p["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", h, p["w_v"])
+    if a.qk_norm:
+        k = attn_mod.rms_norm_headwise(p["k_norm"], k)
+    if a.rope and rope is not None:
+        k = attn_mod.apply_rope(k, positions[None], rope.inv_freq, rope.rot)
+    k, v = _ring_layout(k, L), _ring_layout(v, L)
+    return {"k": k, "v": v, "index": jnp.asarray(S, jnp.int32)}
+
+
+def _ring_layout(t: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Keep the last L positions of (B, S, ...) laid out so that position p
+    sits in slot p % L (matching the decode ring buffer)."""
+    S = t.shape[1]
+    if L >= S:
+        return t if L == S else jnp.pad(t, [(0, 0), (0, L - S)] + [(0, 0)] * (t.ndim - 2))
+    tail = t[:, S - L :]
+    return jnp.roll(tail, shift=(S - L) % L, axis=1)
+
+
+def _ssm_prefill(p, h, spec: LayerSpec):
+    out, hstate = ssm_mod.ssm_fwd(p, h, spec.ssm, return_state=True)
+    # conv tail: last (W-1) pre-activation conv inputs
+    z, xbc, _ = ssm_mod._split_in(p, h, spec.ssm)
+    tail = xbc[:, -(spec.ssm.conv_width - 1) :]
+    return out, hstate, tail
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size), 0, dtype)
+    if cfg.prefix:
+        params["prefix"] = tuple(
+            init_layer(jax.random.fold_in(keys[2], i), cfg, s)
+            for i, s in enumerate(cfg.prefix)
+        )
+    # stacked pattern blocks: leaf shape (repeats, ...)
+    blocks = []
+    for pi, spec in enumerate(cfg.pattern):
+        def one(k, spec=spec):
+            return init_layer(k, cfg, spec)
+
+        ks = jax.random.split(jax.random.fold_in(keys[3], pi), cfg.repeats)
+        blocks.append(jax.vmap(one)(ks))
+    params["blocks"] = tuple(blocks)
+    if cfg.remainder:
+        params["remainder"] = tuple(
+            init_layer(jax.random.fold_in(keys[4], i), cfg, s)
+            for i, s in enumerate(cfg.remainder)
+        )
+    if cfg.frontend != "none":
+        # projector stub: frontend embeddings are already d_model-sized; a
+        # learned affine keeps the projector trainable without a real ViT.
+        params["frontend_proj"] = dense_init(
+            keys[5], (cfg.d_model, cfg.d_model), 0, dtype
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill) with pattern scan
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ArchConfig, tokens, extra_embeds):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if extra_embeds is not None:
+        fe = jnp.einsum("bpd,de->bpe", extra_embeds.astype(x.dtype), params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return pshard.constrain(x, pshard.dp(), None, None)
+
+
+def forward(
+    params: Dict,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,  # (B, S_text)
+    extra_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) stub frontend
+    mode: str = "train",
+    remat: bool = True,
+    caches: Optional[Dict] = None,
+    seq_shard: bool = False,
+    explicit_tp: bool = False,
+    remat_save_outputs: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Returns (final_hidden (B,S,d), total_moe_aux, caches|None)."""
+    x = _embed_tokens(params, cfg, tokens, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    ropes = build_ropes(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    out_caches: Dict = {}
+
+    def run_layer(p, x, spec, cache=None):
+        return apply_layer(
+            p, x, cfg, spec, ropes, positions, mode, cache,
+            seq_shard=seq_shard, explicit_tp=explicit_tp,
+            name_outputs=remat_save_outputs,
+        )
+
+    for i, spec in enumerate(cfg.prefix):
+        x, c, aux = run_layer(params["prefix"][i], x, spec)
+        aux_total += aux
+        if mode == "prefill":
+            out_caches.setdefault("prefix", []).append(c)
+
+    def scan_body(carry, block_params):
+        x, aux = carry
+        caches_out = []
+        for pi, spec in enumerate(cfg.pattern):
+            x, c, a = run_layer(block_params[pi], x, spec)
+            aux = aux + a
+            caches_out.append(c)
+        outs = tuple(caches_out) if mode == "prefill" else None
+        return (x, aux), outs
+
+    if remat and mode == "train":
+        if remat_save_outputs:
+            policy = jax.checkpoint_policies.save_only_these_names("branch_out")
+            body = jax.checkpoint(scan_body, policy=policy)
+        else:
+            body = jax.checkpoint(scan_body)
+    else:
+        body = scan_body
+    (x, aux_total), block_caches = jax.lax.scan(
+        body, (x, aux_total), params["blocks"]
+    )
+    if mode == "prefill":
+        out_caches["blocks"] = block_caches
+
+    for i, spec in enumerate(cfg.remainder):
+        x, c, aux = run_layer(params["remainder"][i], x, spec)
+        aux_total += aux
+        if mode == "prefill":
+            out_caches.setdefault("remainder", []).append(c)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x, aux_total, (out_caches if mode == "prefill" else None)
+
+
+# ---------------------------------------------------------------------------
+# Logits / loss
+# ---------------------------------------------------------------------------
+
+
+def unembed(params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def lm_loss(
+    params: Dict,
+    cfg: ArchConfig,
+    x_final: jnp.ndarray,  # (B, S, d)
+    labels: jnp.ndarray,  # (B, S) int32; -1 = ignore
+    vocab_chunk: int = 0,
+) -> jnp.ndarray:
+    """Mean causal-LM cross entropy. ``vocab_chunk`` > 0 scans over sequence
+    chunks so only (B, chunk, V) logits are ever live (needed for 256k-vocab
+    archs at 4k sequence)."""
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    valid = (labels >= 0).astype(jnp.float32)
+    safe_labels = jnp.maximum(labels, 0)
+
+    def chunk_loss(xc, lc, vc):
+        logits = jnp.einsum("bsd,dv->bsv", xc, w)
+        logits = pshard.constrain(logits, pshard.dp(), None, "model")
+        logits = logits.astype(jnp.float32)
+        if cfg.logits_softcap:
+            logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * vc)
+
+    S = x_final.shape[1]
+    if vocab_chunk and S > vocab_chunk and S % vocab_chunk == 0:
+        nc = S // vocab_chunk
+        xcs = x_final.reshape(x_final.shape[0], nc, vocab_chunk, -1).swapaxes(0, 1)
+        lcs = safe_labels.reshape(labels.shape[0], nc, vocab_chunk).swapaxes(0, 1)
+        vcs = valid.reshape(valid.shape[0], nc, vocab_chunk).swapaxes(0, 1)
+
+        def body(tot, inp):
+            xc, lc, vc = inp
+            return tot + chunk_loss(xc, lc, vc), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xcs, lcs, vcs))
+    else:
+        total = chunk_loss(x_final, safe_labels, valid)
+    return total / jnp.maximum(valid.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, seq_len: int) -> Dict:
+    """Caches for every layer at context length seq_len (ShapeDtypeStruct-
+    compatible: built from jnp.zeros; dryrun uses jax.eval_shape on this)."""
+    dtype = dtype_of(cfg.compute_dtype)
+
+    def one(spec: LayerSpec):
+        if spec.kind == "attn":
+            return attn_mod.init_cache(spec.attn, batch, seq_len, dtype)
+        return ssm_mod.init_ssm_cache(spec.ssm, batch, dtype)
+
+    caches: Dict = {}
+    if cfg.prefix:
+        caches["prefix"] = [one(s) for s in cfg.prefix]
+    blocks = []
+    for spec in cfg.pattern:
+        c = one(spec)
+        blocks.append(jax.tree.map(lambda t: jnp.stack([t] * cfg.repeats), c))
+    caches["blocks"] = tuple(blocks)
+    if cfg.remainder:
+        caches["remainder"] = [one(s) for s in cfg.remainder]
+    return caches
+
+
+def decode_step(
+    params: Dict,
+    cfg: ArchConfig,
+    caches: Dict,
+    token: jnp.ndarray,  # (B, 1) int32
+    mla_absorb: bool = True,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. Returns (logits (B,1,V), new caches)."""
+    x = params["embed"][token]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    ropes = build_ropes(cfg)
+    positions = None  # decode positions come from cache indices
+    new_caches: Dict = {}
+
+    def run_layer(p, x, spec, cache):
+        return apply_layer(
+            p, x, cfg, spec, ropes, positions, "decode", cache, mla_absorb=mla_absorb
+        )
+
+    if cfg.prefix:
+        new_caches["prefix"] = []
+        for i, spec in enumerate(cfg.prefix):
+            x, c, _ = run_layer(params["prefix"][i], x, spec, caches["prefix"][i])
+            new_caches["prefix"].append(c)
+
+    def scan_body(x, xs):
+        block_params, block_caches = xs
+        new_cs = []
+        for pi, spec in enumerate(cfg.pattern):
+            x, c, _ = run_layer(block_params[pi], x, spec, block_caches[pi])
+            new_cs.append(c)
+        return x, tuple(new_cs)
+
+    x, block_caches = jax.lax.scan(
+        scan_body, x, (params["blocks"], caches["blocks"])
+    )
+    new_caches["blocks"] = block_caches
+
+    if cfg.remainder:
+        new_caches["remainder"] = []
+        for i, spec in enumerate(cfg.remainder):
+            x, c, _ = run_layer(params["remainder"][i], x, spec, caches["remainder"][i])
+            new_caches["remainder"].append(c)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    return logits, new_caches

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine, exponential_decay, warmup_cosine  # noqa: F401

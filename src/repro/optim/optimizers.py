@@ -1,0 +1,77 @@
+"""Minimal optimizer library (no optax offline): SGD(+momentum), AdamW.
+
+    opt = sgd(momentum=0.9)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, lr)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (params, grads, state, lr) -> (params, state)
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """Paper's local optimizer is plain SGD (Sec. IV)."""
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, grads, state, lr):
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new, state
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g, state["m"], grads)
+        step = (
+            jax.tree.map(lambda g, m_: g + momentum * m_, grads, m) if nesterov else m
+        )
+        new = jax.tree.map(lambda p, s: p - lr * s.astype(p.dtype), params, step)
+        return new, {"m": m}
+
+    return Optimizer(f"sgd(m={momentum})", init, update)
+
+
+def adamw(
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer("adamw", init, update)

@@ -1,0 +1,33 @@
+"""Learning-rate schedules. The paper uses lr0=0.1 with decay 0.998/round."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr0: float, decay: float):
+    """Paper Sec. IV: lr_t = lr0 * decay^t (decay per communication round)."""
+    return lambda step: jnp.asarray(lr0, jnp.float32) * decay ** step.astype(
+        jnp.float32
+    )
+
+
+def cosine(lr0: float, total_steps: int, lr_min: float = 0.0):
+    def f(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return lr_min + 0.5 * (lr0 - lr_min) * (1 + jnp.cos(jnp.pi * frac))
+
+    return f
+
+
+def warmup_cosine(lr0: float, warmup: int, total_steps: int, lr_min: float = 0.0):
+    cos = cosine(lr0, max(total_steps - warmup, 1), lr_min)
+
+    def f(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, lr0 * w, cos(step - warmup))
+
+    return f

@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (  # noqa: F401
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+from repro.roofline import hw  # noqa: F401

@@ -1,0 +1,142 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute  = HLO_FLOPs_per_device / peak_FLOP/s
+  memory   = HLO_bytes_per_device / HBM_bw
+  collect. = per-device collective bytes / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (post-SPMD, so already
+per device). Collective bytes are parsed from the optimized HLO text:
+we sum the transferred sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (all-reduce counted twice: it moves
+~2x the payload in a ring).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Tuple
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  bf16[2,336,21504]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+_COLL_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind.
+
+    HLO after SPMD partitioning has per-device shapes. A line looks like:
+      %ag = bf16[16,336,...] all-gather(bf16[1,336,...] %x), ...
+    For all-gather we count the result size (what each device receives);
+    for reduce-scatter the operand size (what each device sends); for
+    all-reduce 2x the size (ring = reduce-scatter + all-gather); for
+    all-to-all and collective-permute the payload size.
+    """
+    out = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        for kind in _COLL_KINDS:
+            token = f" {kind}("
+            if token not in line and not line.startswith(kind + "("):
+                continue
+            if f"{kind}-start" in line or f"{kind}-done" in line:
+                # async pairs: count only the -start (has the shapes)
+                if f"{kind}-done" in line:
+                    continue
+            # result shape: first shape token at/after '=' (tuple results:
+            # sum components)
+            try:
+                rhs = line.split("=", 1)[1]
+            except IndexError:
+                continue
+            head = rhs.split(kind)[0]
+            shapes = _SHAPE_RE.findall(head)
+            result_bytes = 0
+            for dt, dims in shapes:
+                nb = _DTYPE_BYTES.get(dt, 0)
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                result_bytes += n * nb
+            # operand shapes: inside kind(...)
+            inner = rhs.split(token if token in rhs else kind + "(", 1)[-1]
+            op_shapes = _SHAPE_RE.findall(inner.split(")")[0])
+            operand_bytes = 0
+            for dt, dims in op_shapes:
+                nb = _DTYPE_BYTES.get(dt, 0)
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                operand_bytes += n * nb
+            if kind == "all-gather":
+                out[kind] += result_bytes
+            elif kind == "reduce-scatter":
+                out[kind] += operand_bytes
+            elif kind == "all-reduce":
+                out[kind] += 2 * max(result_bytes, operand_bytes)
+            else:
+                out[kind] += max(result_bytes, operand_bytes)
+            break
+    return out
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes: Dict[str, int],
+) -> Dict:
+    coll_total = sum(collective_bytes.values())
+    t_compute = flops_per_device / hw.PEAK_FLOPS_BF16
+    t_memory = bytes_per_device / hw.HBM_BW
+    t_coll = coll_total / hw.ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "collective_bytes": collective_bytes,
+        "collective_bytes_total": coll_total,
+        # fraction of a perfectly-overlapped step spent on the dominant term
+        "dominant_fraction": bound / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(param_count: int, tokens: int, mode: str = "train") -> float:
+    """6·N·D for training, 2·N·D for inference forward (per global step)."""
+    mult = 6 if mode == "train" else 2
+    return mult * param_count * tokens

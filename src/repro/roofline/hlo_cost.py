@@ -1,0 +1,302 @@
+"""While-loop-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts each ``while`` body
+ONCE regardless of trip count — a framework that scans over layers would
+see its per-step flops undercounted by ~num_layers. This module re-derives
+  * dot/conv FLOPs,
+  * bytes written (fusion/op results — a proxy for HBM traffic closer to
+    TPU reality than raw "bytes accessed", since fusion internals stay in
+    registers/VMEM),
+  * per-collective-kind communication bytes,
+from the optimized HLO text, multiplying every computation by its loop
+trip count (nested whiles compose multiplicatively).
+
+This is the dry-run "profiler": hillclimbing reads its per-kind collective
+table and flop/byte totals (EXPERIMENTS.md §Roofline documents the
+cross-check against cost_analysis()).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALLED = re.compile(r"(?:body|condition|calls)=%([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "while", "conditional", "call", "custom-call",
+    "broadcast", "reshape",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_TOKEN.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll: Dict[str, float] = defaultdict(float)
+        self.calls: List[Tuple[str, str, Optional[str]]] = []  # (kind, callee, cond)
+        self.max_const = 0  # for trip-count inference when used as condition
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.lines.append(line)
+        for c in _CONSTANT.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _analyze_computation(comp: Computation) -> None:
+    symtab: Dict[str, str] = {}
+    # first pass: symbol table (types of each value)
+    for line in comp.lines:
+        m = _OP_LINE.match(line)
+        if m:
+            name, type_str = m.group(1), m.group(2)
+            symtab[name] = type_str
+        else:
+            pm = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+parameter\(", line)
+            if pm:
+                symtab[pm.group(1)] = pm.group(2)
+    for line in comp.lines:
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # call edges
+        cm = _CALLED.findall(line)
+        if op == "while":
+            body = re.search(r"body=%([\w.\-]+)", line)
+            cond = re.search(r"condition=%([\w.\-]+)", line)
+            if body:
+                comp.calls.append(("while", body.group(1), cond.group(1) if cond else None))
+            if cond:
+                comp.calls.append(("cond", cond.group(1), None))
+        elif op in ("fusion", "call", "async-start"):
+            for c in cm:
+                comp.calls.append(("call", c, None))
+        bm = _BRANCHES.search(line)
+        if bm:
+            for c in bm.group(1).split(","):
+                c = c.strip().lstrip("%")
+                if c:
+                    comp.calls.append(("branch", c, None))
+        # flops
+        if op in ("dot", "convolution") or (
+            op == "custom-call" and ("matmul" in line or "dot" in line)
+        ):
+            res_dims = _first_shape_dims(type_str) or []
+            res_prod = 1
+            for d in res_dims:
+                res_prod *= d
+            contract = 1
+            cmatch = _CONTRACT.search(line)
+            first_operand = re.match(r"\s*%([\w.\-]+)", rest)
+            if cmatch and first_operand and first_operand.group(1) in symtab:
+                lhs_dims = _first_shape_dims(symtab[first_operand.group(1)]) or []
+                for idx in cmatch.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        contract *= lhs_dims[int(idx)]
+            elif op == "convolution":
+                wnd = re.search(r"window=\{size=([\dx]+)", line)
+                if wnd and first_operand:
+                    spatial = 1
+                    for s in wnd.group(1).split("x"):
+                        spatial *= int(s)
+                    lhs_dims = _first_shape_dims(symtab.get(first_operand.group(1), "")) or [1]
+                    contract = spatial * (lhs_dims[-1] if lhs_dims else 1)
+            comp.flops += 2.0 * res_prod * contract
+        # collective bytes
+        for kind in COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                res_b = _shape_bytes(type_str)
+                # operands: resolve named refs
+                operand_names = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+                op_b = sum(_shape_bytes(symtab.get(o, "")) for o in operand_names)
+                if kind == "all-gather":
+                    comp.coll[kind] += res_b
+                elif kind == "reduce-scatter":
+                    comp.coll[kind] += op_b
+                elif kind == "all-reduce":
+                    comp.coll[kind] += 2 * max(res_b, op_b)
+                else:
+                    comp.coll[kind] += max(res_b, op_b)
+                break
+        # bytes written
+        if op == "dynamic-update-slice":
+            # in-place update with buffer donation/aliasing on TPU: traffic
+            # is the UPDATE operand (e.g. one decode token written into a
+            # ring cache), not the whole result buffer
+            operands = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+            if len(operands) >= 2 and operands[1] in symtab:
+                comp.bytes += _shape_bytes(symtab[operands[1]])
+            else:
+                comp.bytes += _shape_bytes(type_str)
+        elif op not in _SKIP_BYTES_OPS:
+            comp.bytes += _shape_bytes(type_str)
+        elif op == "custom-call":
+            comp.bytes += _shape_bytes(type_str)
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: Optional[str]) -> int:
+    if cond_name and cond_name in comps:
+        return max(comps[cond_name].max_const, 1)
+    return 1
+
+
+def top_contributors(text: str, n: int = 15) -> List[Dict]:
+    """Per-computation (flops, bytes, multiplier) table, largest bytes first
+    — the dry-run 'profile' used to target §Perf iterations."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return []
+    for c in comps.values():
+        if not c.flops and not c.bytes and not c.coll and c.lines:
+            _analyze_computation(c)
+    mult, mult_b = _multipliers(comps, entry)
+    rows = []
+    for cname, c in comps.items():
+        if cname == "__entry__" or mult[cname] == 0:
+            continue
+        rows.append(
+            {
+                "computation": cname,
+                "mult": mult[cname],
+                "flops": mult[cname] * c.flops,
+                "bytes": mult_b[cname] * c.bytes,
+                "collective_bytes": mult[cname] * sum(c.coll.values()),
+            }
+        )
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:n]
+
+
+def _multipliers(comps, entry):
+    """(flop/collective multiplier, bytes multiplier) per computation.
+
+    Fusion-called computations execute in registers/VMEM: their dot flops
+    and collectives count, but their elementwise intermediates do NOT
+    touch memory — only the fusion's result (counted at the call site)
+    does. While bodies count fully, x trip count.
+    """
+    mult: Dict[str, float] = defaultdict(float)
+    mult_b: Dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    mult_b[entry.name] = 1.0
+    for _ in range(64):
+        changed = False
+        for cname, c in comps.items():
+            if cname == "__entry__" or mult[cname] == 0:
+                continue
+            for kind, callee, cond in c.calls:
+                if callee not in comps:
+                    continue
+                m = mult[cname]
+                mb = mult_b[cname]
+                if kind == "while":
+                    trip = _trip_count(comps, cond)
+                    m *= trip
+                    mb *= trip
+                elif kind == "call":
+                    mb = 0.0  # fusion internals stay in registers
+                if m > mult[callee]:
+                    mult[callee] = m
+                    changed = True
+                if mb > mult_b[callee]:
+                    mult_b[callee] = mb
+                    changed = True
+        if not changed:
+            break
+    return mult, mult_b
+
+
+def analyze(text: str) -> Dict:
+    """Full-module analysis. Returns dict with flops, bytes, collectives
+    (per-kind), all per-device (post-SPMD shapes)."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+    for c in comps.values():
+        if not c.flops and not c.bytes and not c.coll and c.lines:
+            _analyze_computation(c)
+    mult, mult_b = _multipliers(comps, entry)
+    flops = 0.0
+    bytes_ = 0.0
+    coll: Dict[str, float] = defaultdict(float)
+    for cname, c in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult[cname]
+        if m == 0:
+            continue
+        flops += m * c.flops
+        bytes_ += mult_b[cname] * c.bytes
+        for k, v in c.coll.items():
+            coll[k] += m * v
+    return {"flops": flops, "bytes": bytes_, "collectives": dict(coll)}

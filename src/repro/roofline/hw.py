@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the dry-run's roofline denominators)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per-direction usable)
+
+CHIPS_PER_POD = 256
+PODS = 2

@@ -1,0 +1,194 @@
+"""Sharding rules: logical parameter/activation axes -> PartitionSpec.
+
+Mesh axes:
+  single pod : ("data", "model")            = (16, 16)
+  multi-pod  : ("pod", "data", "model")     = (2, 16, 16)
+
+Batch shards over ("pod","data"); tensor-parallel dims (heads / ffn hidden
+/ experts / vocab) over "model"; the d_model dim of weight matrices over
+"data" (FSDP-style). Every rule degrades gracefully: an axis is sharded
+only if its size divides the mesh axis (e.g. whisper's vocab 51865 and
+llama4's 40 query heads fall back to the next candidate or replicate).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh_axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh: Mesh):
+    """Axes used for batch/data parallelism."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % mesh_axis_size(mesh, axis) == 0
+
+
+def _pick(dims: Dict[int, int], mesh: Mesh, prefs: Tuple[Tuple[int, object], ...]):
+    """Build a spec list for an array with dims {axis_index: size}; prefs is
+    a priority list of (axis_index, mesh_axis). Each mesh axis is used at
+    most once; an axis is skipped unless it divides."""
+    ndim = len(dims)
+    spec = [None] * ndim
+    used = set()
+    for ax, mesh_axis in prefs:
+        key = mesh_axis if isinstance(mesh_axis, str) else tuple(mesh_axis)
+        if key in used or spec[ax] is not None:
+            continue
+        if _fits(dims[ax], mesh, mesh_axis):
+            spec[ax] = mesh_axis
+            used.add(key)
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (by leaf name inside the layer structures)
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(name: str, shape: Tuple[int, ...], mesh: Mesh, stacked: bool) -> P:
+    """name = leaf key (e.g. 'w_q'); shape excludes the stacked repeat dim."""
+    dims = dict(enumerate(shape))
+    n = len(shape)
+
+    def pick(*prefs):
+        spec = _pick(dims, mesh, prefs)
+        if stacked:
+            return P(None, *spec)
+        return spec
+
+    if name in ("embed",):  # (V, d)
+        return pick((0, "model"), (1, "data"))
+    if name == "lm_head":  # (d, V)
+        return pick((1, "model"), (0, "data"))
+    if name in ("w_q", "w_k", "w_v"):  # (d, H, Dh)
+        return pick((1, "model"), (2, "model"), (0, "data"))
+    if name == "w_o":  # (H, Dh, d)
+        return pick((0, "model"), (1, "model"), (2, "data"))
+    if name in ("w_uq", "w_uk", "w_uv"):  # (r, H, e)
+        return pick((1, "model"), (0, "data"))
+    if name in ("w_dq", "w_dkv", "w_k_rope"):  # (d, r)
+        return pick((0, "data"))
+    if name in ("w_in", "w_gate"):
+        if n == 2:  # dense (d, f)
+            return pick((1, "model"), (0, "data"))
+        return pick((0, "model"), (1, "data"))  # moe (E, d, f)
+    if name == "w_out":
+        if n == 2:  # dense (f, d) — or ssm (di, d)
+            return pick((0, "model"), (1, "data"))
+        return pick((0, "model"), (2, "data"))  # moe (E, f, d)
+    if name in ("shared_in", "shared_gate"):  # (d, f)
+        return pick((1, "model"), (0, "data"))
+    if name == "shared_out":  # (f, d)
+        return pick((0, "model"), (1, "data"))
+    if name == "router":  # (d, E)
+        return pick((0, "data"))
+    if name == "conv_w":  # (W, ch)
+        return pick((1, "model"))
+    if name in ("conv_b", "norm_scale"):  # (ch,)
+        return pick((0, "model"))
+    if name in ("A_log", "dt_bias", "D"):  # (nh,)
+        return pick((0, "model"))
+    if name == "frontend_proj":  # (d, d)
+        return pick((1, "model"), (0, "data"))
+    # norms / scalars / small vectors: replicate
+    return P(*([None] * (n + (1 if stacked else 0))))
+
+
+def params_pspecs(params, mesh: Mesh):
+    """PartitionSpec pytree matching a params pytree (stacked block leaves
+    get a leading replicated repeat dim)."""
+
+    def visit(path, leaf):
+        names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        name = None
+        for part in reversed(names):
+            if isinstance(part, str):
+                name = part
+                break
+        # stacked iff under 'blocks' or (encdec) '*_layers'
+        stacked = any(
+            isinstance(p, str) and (p == "blocks" or p.endswith("_layers"))
+            for p in names
+        )
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        return _param_spec(name or "", shape, mesh, stacked)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def visit(leaf):
+        dims = dict(enumerate(leaf.shape))
+        return _pick(dims, mesh, ((0, dp),))
+
+    return jax.tree.map(visit, batch)
+
+
+def cache_pspecs(caches, mesh: Mesh):
+    """Decode caches. Layout conventions (possibly with a leading stacked
+    repeat dim): k/v (B, L, Hk, D); c_kv/k_rope (B, L, r); ssm h
+    (B, nh, hd, ds); conv (B, W-1, ch); cross_k/v (n_dec, B, T, Hk, D);
+    index scalar. Batch shards over dp when divisible; otherwise the cache
+    length L shards over ("data") and heads over "model"."""
+    dp = dp_axes(mesh)
+
+    def visit(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        name = next((n for n in reversed(names) if isinstance(n, str)), "")
+        stacked = any(n == "blocks" for n in names if isinstance(n, str))
+        off = 1 if stacked else 0
+        shape = leaf.shape
+        dims = dict(enumerate(shape))
+        if name == "index":
+            return P(*([None] * leaf.ndim))
+        if name in ("k", "v", "c_kv", "k_rope"):
+            b_ax, l_ax = off, off + 1
+            prefs = [(b_ax, dp)]
+            if shape[b_ax] % mesh_axis_size(mesh, dp) != 0:
+                prefs = [(l_ax, "data")]
+            if len(shape) - off == 4:  # k/v with heads
+                prefs.append((off + 2, "model"))
+                prefs.append((l_ax, "model"))  # fallback: L over model too
+            else:
+                prefs.append((l_ax, "model"))
+            return _pick(dims, mesh, tuple(prefs))
+        if name in ("cross_k", "cross_v"):  # (n_dec, B, T, Hk, D)
+            return _pick(dims, mesh, ((1, dp), (3, "model")))
+        if name == "h":  # (B, nh, hd, ds)
+            prefs = [(off, dp), (off + 1, "model")]
+            return _pick(dims, mesh, tuple(prefs))
+        if name == "conv":  # (B, W-1, ch)
+            return _pick(dims, mesh, ((off, dp), (off + 2, "model")))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

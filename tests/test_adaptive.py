@@ -1,0 +1,75 @@
+"""Dropout-robust adaptive policy (Remark 1 / Conclusion extension)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_metric as lm
+from repro.core.adaptive import (
+    dropout_update_probability,
+    floored_probs,
+    tradeoff_curve,
+)
+
+
+@given(
+    nk=st.tuples(st.integers(5, 150), st.integers(1, 149)).filter(lambda t: t[1] < t[0]),
+    eps=st.floats(0.0, 1.0),
+)
+@settings(max_examples=80, deadline=None)
+def test_rate_constraint_preserved(nk, eps):
+    """The blend keeps the paper's fairness constraint (8): rate == k/n."""
+    n, k = nk
+    m = max(2 * (n // k), 2)
+    p = floored_probs(n, k, m, eps)
+    # feasible unless the floor family can't reach the rate (extreme eps
+    # with k/n tiny); tolerate small deviation at the clip boundary
+    assert lm.selection_rate(p) == pytest.approx(k / n, rel=0.02)
+
+
+def test_eps_zero_is_optimal():
+    p = floored_probs(100, 15, 10, 0.0)
+    np.testing.assert_allclose(p[:-1], lm.optimal_probs(100, 15, 10)[:-1], atol=1e-9)
+    assert lm.markov_var(p) == pytest.approx(lm.optimal_var(100, 15, 10), abs=1e-6)
+
+
+def test_variance_monotone_in_eps():
+    """More floor -> less age-determinism -> higher Var[X]."""
+    eps, var, _ = tradeoff_curve(100, 15, 10, d=0.01, eps_grid=np.linspace(0, 1, 6))
+    assert all(b >= a - 1e-6 for a, b in zip(var, var[1:]))
+    # endpoints: optimal ... close to geometric
+    assert var[0] == pytest.approx(lm.optimal_var(100, 15, 10), abs=1e-6)
+    assert var[-1] > 10  # near random-selection variance (37.8)
+
+
+def test_dropout_update_probability_monotone():
+    """The floor increases the chance of an update before dropout — the
+    quantitative version of Remark 1's argument."""
+    n, k, m, d = 100, 15, 10, 0.05
+    p_opt = floored_probs(n, k, m, 0.0)
+    p_flr = floored_probs(n, k, m, 0.5)
+    assert dropout_update_probability(p_flr, d) > dropout_update_probability(p_opt, d)
+
+
+def test_dropout_probability_closed_form_vs_simulation():
+    rng = np.random.default_rng(0)
+    n, k, m, d = 100, 15, 10, 0.08
+    p = floored_probs(n, k, m, 0.3)
+    # simulate fresh clients until dropout
+    wins = 0
+    trials = 4000
+    for _ in range(trials):
+        state = 0
+        while True:
+            if rng.random() < d:
+                break
+            if rng.random() < p[state]:
+                wins += 1
+                break
+            state = min(state + 1, m)
+    est = wins / trials
+    assert dropout_update_probability(p, d) == pytest.approx(est, abs=0.025)
+
+
+def test_no_dropout_always_updates():
+    p = floored_probs(50, 10, 8, 0.2)
+    assert dropout_update_probability(p, 0.0) == pytest.approx(1.0, abs=1e-6)

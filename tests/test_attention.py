@@ -1,0 +1,145 @@
+"""Attention unit tests: masks, GQA grouping, MLA absorption identity,
+ring caches, flash-vs-direct equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionSpec
+from repro.models import attention as A
+from repro.models.common import rope_frequencies
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _spec(**kw):
+    base = dict(num_heads=4, num_kv_heads=2, head_dim=32)
+    base.update(kw)
+    return AttentionSpec(**base)
+
+
+def test_pair_mask_causal_window_chunk():
+    qp = jnp.arange(8)
+    m = A._pair_mask(_spec(), qp, qp)
+    assert bool(m[3, 3]) and bool(m[5, 2]) and not bool(m[2, 5])
+    ms = A._pair_mask(_spec(kind="sliding", window=3), qp, qp)
+    assert bool(ms[5, 3]) and not bool(ms[5, 2])
+    mc = A._pair_mask(_spec(kind="chunked", window=4), qp, qp)
+    assert bool(mc[5, 4]) and not bool(mc[5, 3])  # chunk boundary at 4
+
+
+@pytest.mark.parametrize("kind,window", [("full", 0), ("sliding", 5), ("chunked", 4)])
+def test_flash_jnp_equals_direct(kind, window):
+    spec = _spec(kind=kind, window=window)
+    B, Hk, G, S, D = 1, 2, 2, 256, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hk, G, S, D))
+    k = jax.random.normal(ks[1], (B, Hk, S, D))
+    v = jax.random.normal(ks[2], (B, Hk, S, D))
+    pos = jnp.arange(S)
+    direct = A._attend_direct(
+        q, k, v, A._pair_mask(spec, pos, pos)[None, None, None], 0.2
+    )
+    # force the blocked path with small blocks
+    old_q, old_k = A.BLOCK_Q, A.BLOCK_K
+    A.BLOCK_Q, A.BLOCK_K = 64, 64
+    try:
+        flash = A._attend_flash_jnp(q, k, v, spec, pos, pos, 0.2)
+    finally:
+        A.BLOCK_Q, A.BLOCK_K = old_q, old_k
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(flash), atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_equals_repeated_mha():
+    """GQA grouped computation == kv repeated to full MHA."""
+    spec = _spec()
+    d_model = 64
+    p = A.init_attention(KEY, d_model, spec, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, d_model))
+    pos = jnp.arange(16)
+    inv, rot = rope_frequencies(spec.head_dim, 10_000.0)
+    table = A.RopeTable(inv, rot)
+    out = A.attention_fwd(p, x, spec, table, pos)
+    # same weights, MHA with repeated kv
+    spec_mha = dataclasses.replace(spec, num_kv_heads=spec.num_heads)
+    p2 = dict(p)
+    p2["w_k"] = jnp.repeat(p["w_k"], 2, axis=1)
+    p2["w_v"] = jnp.repeat(p["w_v"], 2, axis=1)
+    out2 = A.attention_fwd(p2, x, spec_mha, table, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=2e-5, rtol=2e-5)
+
+
+def test_ring_cache_slot_positions():
+    spec = _spec(kind="sliding", window=4)
+    L = 4
+    pos = A._slot_positions(spec, L, jnp.asarray(6))
+    # slots hold the newest position == slot (mod 4), <= 6 (being written)
+    assert pos.tolist() == [4, 5, 6, 3]
+    valid = A._slot_valid(spec, pos, jnp.asarray(6))
+    assert valid.tolist() == [True, True, True, True]  # all within window 4
+    spec_c = _spec(kind="chunked", window=4)
+    valid_c = A._slot_valid(spec_c, pos, jnp.asarray(6))
+    # chunk of 6 is [4..7]: position 3 invalid
+    assert valid_c.tolist() == [True, True, True, False]
+
+
+def test_decode_matches_fwd_full():
+    """Cached decode over a sequence == full forward last-token logits."""
+    spec = _spec()
+    d_model = 64
+    p = A.init_attention(KEY, d_model, spec, jnp.float32)
+    S = 12
+    x = jax.random.normal(KEY, (1, S, d_model))
+    pos = jnp.arange(S)
+    inv, rot = rope_frequencies(spec.head_dim, 10_000.0)
+    table = A.RopeTable(inv, rot)
+    full = A.attention_fwd(p, x, spec, table, pos)
+    cache = A.init_cache(spec, 1, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = A.attention_decode(p, x[:, t : t + 1], spec, table, cache)
+        outs.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(full), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_mla_absorption_identity():
+    """Absorbed MLA decode == naive decompression decode (bit-for-bit math)."""
+    spec = AttentionSpec(
+        num_heads=4, num_kv_heads=4, head_dim=32, kv_lora=16, q_lora=24, rope_dim=8
+    )
+    d_model = 64
+    p = A.init_attention(KEY, d_model, spec, jnp.float32)
+    inv, rot = rope_frequencies(spec.rope_dim, 10_000.0)
+    table = A.RopeTable(inv, rot)
+    cache1 = A.init_cache(spec, 1, 8, jnp.float32)
+    cache2 = A.init_cache(spec, 1, 8, jnp.float32)
+    for t in range(8):
+        x = jax.random.normal(jax.random.fold_in(KEY, t), (1, 1, d_model))
+        y1, cache1 = A._mla_decode(p, x, spec, table, cache1, absorb=True)
+        y2, cache2 = A._mla_decode(p, x, spec, table, cache2, absorb=False)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+
+
+def test_mla_decode_matches_fwd():
+    spec = AttentionSpec(
+        num_heads=4, num_kv_heads=4, head_dim=32, kv_lora=16, rope_dim=8
+    )
+    d_model = 64
+    p = A.init_attention(KEY, d_model, spec, jnp.float32)
+    inv, rot = rope_frequencies(spec.rope_dim, 10_000.0)
+    table = A.RopeTable(inv, rot)
+    S = 8
+    x = jax.random.normal(KEY, (1, S, d_model))
+    full = A._mla_fwd(p, x, spec, table, jnp.arange(S))
+    cache = A.init_cache(spec, 1, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = A._mla_decode(p, x[:, t : t + 1], spec, table, cache, absorb=True)
+        outs.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(full), atol=1e-4, rtol=1e-4
+    )

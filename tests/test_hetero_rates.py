@@ -1,0 +1,49 @@
+"""Heterogeneous per-client selection rates (beyond-paper extension)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_metric as lm
+from repro.core.selection import make_markov_hetero, simulate
+
+
+@given(mean_gap=st.floats(1.0, 50.0), m=st.integers(1, 30))
+@settings(max_examples=100, deadline=None)
+def test_rate_generalization_consistent(mean_gap, m):
+    p = lm.optimal_probs_for_mean(mean_gap, m)
+    ex, _, var = lm.markov_moments(p)
+    assert ex == pytest.approx(mean_gap, rel=1e-6)
+    assert var == pytest.approx(lm.optimal_var_for_mean(mean_gap, m), abs=1e-6)
+
+
+def test_hetero_policy_rates_and_variance():
+    # three speed tiers: fast clients every ~4 rounds, slow every ~20
+    rates = np.concatenate([
+        np.full(20, 0.25), np.full(40, 0.10), np.full(40, 0.05),
+    ])
+    m = 25
+    pol = make_markov_hetero(rates, m)
+    hist = simulate(pol, jax.random.PRNGKey(0), len(rates), 6000)
+    realized = hist.mean(axis=0)
+    # per-tier realized rates match targets
+    assert realized[:20].mean() == pytest.approx(0.25, rel=0.03)
+    assert realized[20:60].mean() == pytest.approx(0.10, rel=0.05)
+    assert realized[60:].mean() == pytest.approx(0.05, rel=0.07)
+    # per-tier Var[X] at each tier's own optimum
+    for sl, rate in [(slice(0, 20), 0.25), (slice(60, 100), 0.05)]:
+        gaps = []
+        for c in range(*sl.indices(100)):
+            rounds = np.flatnonzero(hist[:, c])
+            if len(rounds) > 1:
+                gaps.append(np.diff(rounds))
+        gaps = np.concatenate(gaps)
+        expect = lm.optimal_var_for_mean(1 / rate, m)
+        assert gaps.var() == pytest.approx(expect, abs=max(0.3, 0.15 * expect))
+
+
+def test_total_load_matches_budget():
+    rates = np.full(50, 0.2)
+    pol = make_markov_hetero(rates, 10)
+    hist = simulate(pol, jax.random.PRNGKey(1), 50, 3000)
+    assert hist.sum(axis=1).mean() == pytest.approx(10.0, rel=0.05)

@@ -1,0 +1,124 @@
+"""Property tests for the paper's theory (Eqs. 5-22, Theorems 1-2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_metric as lm
+
+nk_pairs = st.tuples(st.integers(2, 200), st.integers(1, 199)).filter(
+    lambda t: t[1] < t[0]
+)
+
+
+@given(nk=nk_pairs)
+@settings(max_examples=200, deadline=None)
+def test_selection_rate_is_k_over_n(nk):
+    """Constraint (3)/(8): steady-state selection probability == k/n."""
+    n, k = nk
+    m = max(min(2 * math.floor(n / k), 40), 1)
+    p = lm.optimal_probs(n, k, m)
+    assert lm.selection_rate(p) == pytest.approx(k / n, rel=1e-9)
+
+
+@given(nk=nk_pairs)
+@settings(max_examples=200, deadline=None)
+def test_mean_is_n_over_k(nk):
+    """Eq. (17): E[X] = n/k for any feasible chain; optimal included."""
+    n, k = nk
+    m = max(min(math.floor(n / k) + 3, 50), 1)
+    p = lm.optimal_probs(n, k, m)
+    ex, _, _ = lm.markov_moments(p)
+    assert ex == pytest.approx(n / k, rel=1e-9)
+
+
+@given(nk=nk_pairs, m=st.integers(1, 40))
+@settings(max_examples=300, deadline=None)
+def test_theorem2_variance_closed_form(nk, m):
+    """Var[X] of the optimal chain equals Theorem 2's closed form."""
+    n, k = nk
+    p = lm.optimal_probs(n, k, m)
+    assert lm.markov_var(p) == pytest.approx(lm.optimal_var(n, k, m), abs=1e-7)
+
+
+@given(nk=nk_pairs, m=st.integers(1, 40))
+@settings(max_examples=300, deadline=None)
+def test_optimal_beats_random(nk, m):
+    """Remark 2: optimal Markov Var < random selection Var (for k < n)."""
+    n, k = nk
+    v_opt = lm.optimal_var(n, k, m)
+    v_rand = lm.random_selection_var(n, k)
+    assert v_opt <= v_rand + 1e-9
+    if k < n:  # strict when chain can help
+        assert v_opt < v_rand + 1e-9
+
+
+@given(nk=nk_pairs)
+@settings(max_examples=200, deadline=None)
+def test_variance_monotone_in_m(nk):
+    """Remark 2: optimal Var[X] is non-increasing in m and saturates at
+    m = floor(n/k)."""
+    n, k = nk
+    r = math.floor(n / k)
+    vs = [lm.optimal_var(n, k, m) for m in range(1, r + 3)]
+    for a, b in zip(vs, vs[1:]):
+        assert b <= a + 1e-9
+    assert lm.optimal_var(n, k, r) == pytest.approx(
+        lm.optimal_var(n, k, r + 5), abs=1e-9
+    )
+
+
+@given(nk=nk_pairs, m=st.integers(1, 25), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_random_feasible_probs_never_beat_optimal(nk, m, seed):
+    """Optimality: no feasible chain (constraint 17 satisfied) has lower
+    Var than Theorem 2's construction."""
+    n, k = nk
+    rng = np.random.default_rng(seed)
+    # random chain, then rescale p_m to satisfy E[X]=n/k if feasible
+    p = rng.uniform(0.01, 0.99, size=m + 1)
+    # solve for p_m from (17): E0 = 1 + sum prods + prod/p_m
+    prods = np.cumprod(1 - p[:-1])
+    base = 1 + prods[:-1].sum() if m >= 1 else 1.0
+    rem = n / k - base
+    tail = prods[-1] if m >= 1 else 1.0
+    if rem <= 0 or tail / rem > 1 or tail / rem <= 0:
+        return  # infeasible draw
+    p[-1] = tail / rem
+    ex, _, var = lm.markov_moments(p)
+    if not math.isclose(ex, n / k, rel_tol=1e-6):
+        return
+    assert var >= lm.optimal_var(n, k, m) - 1e-6
+
+
+def test_theorem1_both_regimes():
+    """Theorem 1 closed forms for m=1, k <= n/2 and k >= n/2."""
+    for n, k in [(100, 15), (100, 30), (100, 50), (100, 70), (10, 9)]:
+        p, v = lm.theorem1_optimal(n, k)
+        assert lm.selection_rate(p) == pytest.approx(k / n, rel=1e-9)
+        assert lm.markov_var(p) == pytest.approx(v, abs=1e-9)
+        # matches Theorem 2 at m=1
+        assert v == pytest.approx(lm.optimal_var(n, k, 1), abs=1e-9)
+        # Theorem 1 variance formula itself
+        assert lm.theorem1_var(n, k, p[0], p[1]) == pytest.approx(v, abs=1e-9)
+
+
+def test_paper_headline_numbers():
+    """The paper's simulation setting: n=100, k=15, m=10."""
+    n, k, m = 100, 15, 10
+    p = lm.optimal_probs(n, k, m)
+    # m >= floor(n/k)=6: p* = [0,0,0,0,0, 1/3, 1,1,1,1,1]
+    assert p[:5] == pytest.approx(np.zeros(5))
+    assert p[5] == pytest.approx(1 / 3, abs=1e-9)
+    assert p[6:] == pytest.approx(np.ones(5))
+    c = 100 / 15 - 6
+    assert lm.optimal_var(n, k, m) == pytest.approx(c * (1 - c), abs=1e-12)
+    assert lm.random_selection_var(n, k) == pytest.approx(100 * 85 / 225)
+
+
+def test_integer_ratio_gives_zero_variance():
+    """When k | n and m >= n/k the optimal policy is deterministic."""
+    assert lm.optimal_var(100, 20, 10) == pytest.approx(0.0, abs=1e-12)
+    p = lm.optimal_probs(100, 20, 10)
+    assert lm.markov_var(p) == pytest.approx(0.0, abs=1e-9)

@@ -1,0 +1,89 @@
+"""pshard constraint fallbacks + input_specs sanity for every (arch, shape)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, all_archs, shape_applicable
+from repro.models import factory, pshard
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    assert pshard.constrain(x, "data", "model") is x or (
+        pshard.constrain(x, "data", "model") == x
+    ).all()
+
+
+def test_axis_size_and_dp_without_mesh():
+    assert pshard.axis_size("model") == 1
+    assert pshard.dp() == ()
+
+
+def test_mesh_context_restores():
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+
+    m = FakeMesh()
+    assert pshard.current_mesh() is None
+    with pshard.mesh_context(m):
+        assert pshard.current_mesh() is m
+        assert pshard.axis_size("model") == 2
+        assert pshard.dp() == ("data",)
+    assert pshard.current_mesh() is None
+
+
+@pytest.mark.parametrize("arch", sorted(all_archs()))
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_input_specs_cover_all_pairs(arch, shape):
+    """input_specs builds ShapeDtypeStructs for every required pair without
+    allocating; shapes are internally consistent."""
+    cfg = all_archs()[arch]
+    sc = INPUT_SHAPES[shape]
+    ok, why = shape_applicable(cfg, sc)
+    if not ok:
+        assert why
+        return
+    specs = factory.input_specs(cfg, sc)
+    leaves = jax.tree_util.tree_leaves(specs)
+    assert leaves, (arch, shape)
+    for leaf in leaves:
+        assert hasattr(leaf, "shape") and hasattr(leaf, "dtype")
+    if sc.mode == "train":
+        assert specs["labels"].shape == (sc.global_batch, sc.seq_len)
+    if sc.mode == "decode":
+        assert specs["token"].shape == (sc.global_batch, 1)
+        # caches must fit per device once sharded: apply the cache rules on
+        # the production mesh shape and bound per-device bytes
+        if shape == "long_500k":
+            from jax.sharding import PartitionSpec as P
+
+            from repro import sharding as sr
+
+            class FakeMesh:
+                shape = {"data": 16, "model": 16}
+
+            pspecs = sr.cache_pspecs(specs["caches"], FakeMesh())
+            total = 0.0
+            for leaf, spec in zip(
+                jax.tree_util.tree_leaves(specs["caches"]),
+                jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P)),
+            ):
+                shard = 1
+                for ax in tuple(spec):
+                    if ax is not None:
+                        shard *= 16 if not isinstance(ax, tuple) else 16 ** len(ax)
+                total += leaf.size * leaf.dtype.itemsize / shard
+            assert total < 14e9, (arch, f"{total / 1e9:.1f} GB/device")
+
+
+def test_decode_cache_len_respects_window():
+    cfg = all_archs()["gemma3-27b"]
+    sc = INPUT_SHAPES["long_500k"]
+    specs = factory.input_specs(cfg, sc)
+    lens = set()
+    for leaf in jax.tree_util.tree_leaves(specs["caches"]):
+        if leaf.ndim >= 3 and leaf.shape[-1] in (128,):
+            lens.add(leaf.shape[-3])
+    # both the 1024-window local caches and full-length global caches exist
+    assert 1024 in lens
+    assert sc.seq_len in lens

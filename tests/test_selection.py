@@ -1,0 +1,102 @@
+"""Policy behaviour: Monte-Carlo agreement with theory, AoI dynamics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    age_update,
+    empirical_load_stats,
+    load_metric,
+    make_policy,
+    simulate,
+)
+
+N, K, M = 100, 15, 10
+ROUNDS = 3000
+
+
+@pytest.fixture(scope="module")
+def histories():
+    key = jax.random.PRNGKey(0)
+    return {
+        name: simulate(make_policy(name, N, K, M), key, N, ROUNDS)
+        for name in ("random", "markov", "oldest_age", "round_robin")
+    }
+
+
+def test_age_update_eq4():
+    ages = jnp.array([0, 3, 7, 2])
+    sel = jnp.array([True, False, True, False])
+    out = age_update(ages, sel)
+    assert out.tolist() == [0, 4, 0, 3]
+
+
+def test_selection_rates(histories):
+    """Every policy selects each client with rate ~= k/n (constraint 3)."""
+    for name, hist in histories.items():
+        per_client = hist.mean(axis=0)
+        assert per_client.mean() == pytest.approx(K / N, rel=0.05), name
+        # and no client starves or dominates
+        assert per_client.min() > 0.5 * K / N, name
+        assert per_client.max() < 2.0 * K / N, name
+
+
+def test_markov_var_matches_theory(histories):
+    stats = empirical_load_stats(histories["markov"])
+    expect = load_metric.optimal_var(N, K, M)
+    assert stats["mean_X"] == pytest.approx(N / K, rel=0.02)
+    assert stats["var_X"] == pytest.approx(expect, abs=0.05)
+
+
+def test_random_var_matches_theory(histories):
+    stats = empirical_load_stats(histories["random"])
+    expect = load_metric.random_selection_var(N, K)
+    assert stats["var_X"] == pytest.approx(expect, rel=0.1)
+
+
+def test_oldest_age_equals_optimal_markov(histories):
+    """Remark 1: oldest-age == optimal Markov in Var[X]."""
+    s = empirical_load_stats(histories["oldest_age"])
+    assert s["var_X"] == pytest.approx(load_metric.optimal_var(N, K, M), abs=0.05)
+
+
+def test_variance_ordering(histories):
+    """round_robin <= markov ~ oldest < random."""
+    v = {n: empirical_load_stats(h)["var_X"] for n, h in histories.items()}
+    assert v["markov"] < v["random"] / 10
+    assert v["oldest_age"] < v["random"] / 10
+    assert v["round_robin"] <= v["markov"] + 0.05
+
+
+def test_markov_cohort_is_variable_with_mean_k(histories):
+    sizes = histories["markov"].sum(axis=1)
+    assert sizes.mean() == pytest.approx(K, rel=0.05)
+    assert sizes.std() > 1.0  # binomial-ish, not exact-k
+    exact = histories["random"].sum(axis=1)
+    assert (exact == K).all()
+
+
+def test_markov_is_decentralized_jit_step():
+    """The markov step must not gather global state: verify it is a pure
+    per-client map + the age update (jit compiles, shapes preserved)."""
+    pol = make_policy("markov", N, K, M)
+    state = pol.init(jax.random.PRNGKey(1), N)
+    step = jax.jit(pol.step)
+    sel, state2 = step(state, jax.random.PRNGKey(2))
+    assert sel.shape == (N,)
+    assert state2["ages"].shape == (N,)
+    # selected clients reset to 0; others incremented
+    np.testing.assert_array_equal(
+        np.asarray(state2["ages"]),
+        np.asarray(age_update(state["ages"], sel)),
+    )
+
+
+def test_gumbel_age_interpolates():
+    key = jax.random.PRNGKey(3)
+    hist_oldest = simulate(make_policy("gumbel_age", N, K, beta=50.0), key, N, 2000)
+    hist_rand = simulate(make_policy("gumbel_age", N, K, beta=0.0), key, N, 2000)
+    v_old = empirical_load_stats(hist_oldest)["var_X"]
+    v_rnd = empirical_load_stats(hist_rand)["var_X"]
+    assert v_old < v_rnd / 3  # high beta ~ oldest-age, low beta ~ random
