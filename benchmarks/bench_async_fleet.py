@@ -1,0 +1,113 @@
+"""Async fleet simulator benchmarks: (a) event-engine + scheduler step
+wall time vs fleet size (the simulator's own scalability — pure event
+bookkeeping, no training), (b) sync vs async federated training compared
+on *simulated* time-to-target-accuracy under a straggler-heavy profile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import load_metric as lm
+from repro.core.aoi import age_update
+from repro.sim import events as ev_mod
+from repro.sim import latency as lat_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _sim_step(probs, m, profile, buffer_size, use_kernel):
+    """One fused scheduler+event step: markov admission -> dispatch ->
+    pop next-k completions -> re-arm. No local training (pure engine)."""
+
+    @jax.jit
+    def step(ages, t_done, clock, key):
+        k_sel, k_lat = jax.random.split(key)
+        idle = jnp.isinf(t_done)
+        send_p = probs[jnp.minimum(ages, m)]
+        send = (jax.random.uniform(k_sel, ages.shape) < send_p) & idle
+        lat = lat_mod.sample_latency(k_lat, profile, jnp.ones(ages.shape, jnp.float32))
+        t_done = jnp.where(send, clock + lat, t_done)
+        ages = age_update(ages, send)
+        t_ev, idx = ev_mod.next_k_events(t_done, buffer_size, use_kernel=use_kernel)
+        valid = jnp.isfinite(t_ev)
+        clock = jnp.maximum(clock, jnp.max(jnp.where(valid, t_ev, -jnp.inf)))
+        t_done = t_done.at[ev_mod.scatter_idx(idx, valid)].set(jnp.inf, mode="drop")
+        return ages, t_done, clock
+
+    return step
+
+
+def run(csv_rows, rounds: int = 10):
+    print("\n== async event engine: scheduler+pop step vs fleet size ==")
+    m = 10
+    profile = lat_mod.get_profile("lognormal")
+    on_cpu = jax.default_backend() == "cpu"
+    for n in (10_000, 100_000, 1_000_000):
+        k = max(int(n * 0.15), 1)
+        buf = min(max(n // 100, 16), 4096)
+        probs = jnp.asarray(lm.optimal_probs(n, k, m), jnp.float32)
+        # Pallas kernel path runs interpreted on CPU (too slow to time);
+        # benchmark the jnp reference there, the kernel on real backends
+        step = _sim_step(probs, m, profile, buf, use_kernel=not on_cpu)
+        ages = jnp.zeros((n,), jnp.int32)
+        t_done = jnp.full((n,), jnp.inf, jnp.float32)
+        clock = jnp.zeros((), jnp.float32)
+        ages, t_done, clock = step(ages, t_done, clock, KEY)  # warm
+        jax.block_until_ready(t_done)
+        t0 = time.time()
+        iters = 10
+        for i in range(iters):
+            ages, t_done, clock = step(ages, t_done, clock, jax.random.fold_in(KEY, i))
+        jax.block_until_ready(t_done)
+        us = (time.time() - t0) / iters * 1e6
+        path = "jnp" if on_cpu else "kernel"
+        print(f"  n={n:>9,} buffer={buf:5d} {us / 1e3:8.2f} ms/step ({path})")
+        csv_rows.append((f"async_engine_step_n{n}", us, f"buffer={buf};path={path}"))
+
+    print("\n== sync vs async: simulated time-to-target accuracy ==")
+    from repro.configs.paper_cnn import MNIST_CNN
+    from repro.data.synthetic import make_image_dataset
+    from repro.fl import FLConfig, make_cnn_task, run_training
+    from repro.sim import AsyncConfig, run_async_training
+
+    small = dataclasses.replace(
+        MNIST_CNN, name="paper-cnn-mnist-bench", image_size=16,
+        conv_channels=(8, 16), fc_width=64,
+    )
+    train, test = make_image_dataset("mnist-bench", 10, 16, 1, 1200, 500, seed=0,
+                                     difficulty=0.8)
+    task = make_cnn_task(small, train, test, n_clients=40)
+    fl = FLConfig(n_clients=40, k=8, m=8, policy="markov", rounds=rounds,
+                  local_epochs=2, batch_size=10, eval_every=1)
+    profile_name = "lognormal"
+    mean_lat = lat_mod.get_profile(profile_name).mean_latency()
+
+    t0 = time.time()
+    sync = run_training(task, fl)
+    sync_s = time.time() - t0
+    sim_sync_t = lat_mod.simulate_sync_duration(
+        sync["selection"], lat_mod.get_profile(profile_name),
+        jax.random.fold_in(KEY, 7),
+    )
+
+    t0 = time.time()
+    acfg = AsyncConfig(buffer_size=fl.k, profile=profile_name)
+    asy = run_async_training(task, fl, acfg)
+    async_s = time.time() - t0
+
+    acc_sync = sync["history"]["accuracy"][-1]
+    acc_async = asy["history"]["accuracy"][-1]
+    sim_async_t = asy["wall_stats"]["sim_time"]
+    print(f"  sync : acc={acc_sync:.3f} simulated {sim_sync_t:8.1f}s "
+          f"(slowest-client rounds, mean client latency {mean_lat:.2f}s)")
+    print(f"  async: acc={acc_async:.3f} simulated {sim_async_t:8.1f}s "
+          f"(staleness mean {asy['wall_stats']['mean_staleness']:.2f})")
+    csv_rows.append(("async_vs_sync_sim_time", sim_async_t * 1e6,
+                     f"sync={sim_sync_t:.1f}s;acc_async={acc_async:.3f};"
+                     f"acc_sync={acc_sync:.3f}"))
+    csv_rows.append(("async_train_steps", async_s / max(rounds, 1) * 1e6,
+                     f"host_s={async_s:.1f};sync_host_s={sync_s:.1f}"))

@@ -15,7 +15,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: variance,scheduler,kernels,convergence,roofline")
+                    help="comma list: variance,scheduler,kernels,convergence,roofline,async")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
     args = ap.parse_args()
@@ -43,6 +43,10 @@ def main() -> None:
 
         bench_convergence.run(csv_rows, rounds=args.rounds,
                               paper_scale=args.paper_scale)
+    if on("async"):
+        from benchmarks import bench_async_fleet
+
+        bench_async_fleet.run(csv_rows, rounds=args.rounds)
     if on("roofline"):
         from benchmarks import bench_roofline
 

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: next-k-completion extraction at fleet scale.
+
+The async event engine needs the k *earliest* pending completion times
+among n in-flight clients, where n may be millions and idle clients carry
+``+inf``. Same tiled masked-reduce idiom as ``aoi_topk``: phase 1 (this
+kernel) tiles the time vector and extracts each tile's k earliest events
+by iterative max over *negated* times (k VPU max-reduces, no sort);
+phase 2 (ops.py) runs a tiny jnp top-k over the (num_tiles * k)
+candidates.
+
+Idle (+inf) entries negate to -inf and lose every max, so they are only
+emitted when a tile holds fewer than k pending events; the caller masks
+them out by finiteness. The selected-element sentinel is -inf (not a
+finite floor) so an exhausted tile can never re-emit a real event.
+
+VMEM per program: one (block_n,) f32 tile + two (k,) outputs — trivially
+small; block_n=65536 streams the fleet through VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 65536
+
+
+def _next_k_kernel(times_ref, vals_ref, idx_ref, *, k: int, block_n: int):
+    ti = pl.program_id(0)
+    neg = -times_ref[...].astype(jnp.float32)  # (block_n,) earliest = max
+    base = ti * block_n
+
+    def body(i, carry):
+        cur, = carry
+        m = jnp.max(cur)
+        am = jnp.argmax(cur)
+        vals_ref[i] = -m  # back to a time; +inf marks "no event"
+        idx_ref[i] = (base + am).astype(jnp.int32)
+        cur = cur.at[am].set(-jnp.inf)
+        return (cur,)
+
+    jax.lax.fori_loop(0, k, body, (neg,))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def tile_next_k(
+    times: jnp.ndarray,  # (n,) f32 completion times, +inf when idle
+    *,
+    k: int,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+):
+    """Returns (vals (tiles, k), idx (tiles, k)) per-tile earliest events."""
+    times = times.astype(jnp.float32)
+    n = times.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        times = jnp.pad(times, (0, pad), constant_values=jnp.inf)
+    tiles = times.shape[0] // bn
+    kernel = functools.partial(_next_k_kernel, k=k, block_n=bn)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles * k,), jnp.float32),
+            jax.ShapeDtypeStruct((tiles * k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(times)
+    return vals.reshape(tiles, k), idx.reshape(tiles, k)

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import aoi_topk as _topk
+from repro.kernels import event_topk as _etopk
 from repro.kernels import fedavg_reduce as _fedavg
 from repro.kernels import flash_attention as _flash
 from repro.kernels import flash_decode as _fdec
@@ -56,3 +57,15 @@ def oldest_age_topk(ages, k, *, block_n=None):
     flat_v, flat_i = vals.reshape(-1), idx.reshape(-1)
     top_v, pos = jax.lax.top_k(flat_v, k)
     return top_v, flat_i[pos]
+
+
+def event_next_k(times, k, *, block_n=None):
+    """Fleet-scale next-k-completion extraction: tiled kernel phase + tiny
+    global top-k over per-tile candidates. Returns (times (k,), indices
+    (k,)) of the k earliest events; slots with no pending event carry
+    ``+inf`` times (mask by finiteness)."""
+    kw = {"block_n": block_n} if block_n else {}
+    vals, idx = _etopk.tile_next_k(times, k=k, interpret=_interpret(), **kw)
+    flat_v, flat_i = vals.reshape(-1), idx.reshape(-1)
+    neg_v, pos = jax.lax.top_k(-flat_v, k)
+    return -neg_v, flat_i[pos]

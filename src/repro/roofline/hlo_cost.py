@@ -155,19 +155,23 @@ def _analyze_computation(comp: Computation) -> None:
                 res_prod *= d
             contract = 1
             cmatch = _CONTRACT.search(line)
-            first_operand = re.match(r"\s*%([\w.\-]+)", rest)
-            if cmatch and first_operand and first_operand.group(1) in symtab:
-                lhs_dims = _first_shape_dims(symtab[first_operand.group(1)]) or []
+            first_operand = re.search(r"%([\w.\-]+)", rest)
+            # operand shapes print inline (newer HLO: "dot(f32[a,b] %x, ...)")
+            # or resolve through the symbol table (older: "dot(%x, %y)")
+            operands_str = rest.split(")")[0]
+            lhs_dims = _first_shape_dims(operands_str)
+            if lhs_dims is None and first_operand:
+                lhs_dims = _first_shape_dims(symtab.get(first_operand.group(1), ""))
+            if cmatch and lhs_dims:
                 for idx in cmatch.group(1).split(","):
                     if idx and int(idx) < len(lhs_dims):
                         contract *= lhs_dims[int(idx)]
             elif op == "convolution":
                 wnd = re.search(r"window=\{size=([\dx]+)", line)
-                if wnd and first_operand:
+                if wnd:
                     spatial = 1
                     for s in wnd.group(1).split("x"):
                         spatial *= int(s)
-                    lhs_dims = _first_shape_dims(symtab.get(first_operand.group(1), "")) or [1]
                     contract = spatial * (lhs_dims[-1] if lhs_dims else 1)
             comp.flops += 2.0 * res_prod * contract
         # collective bytes

@@ -1,6 +1,7 @@
 """Dropout-robust adaptive policy (Remark 1 / Conclusion extension)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import load_metric as lm
