@@ -71,8 +71,8 @@ def run(csv_rows, rounds: int = 10):
     print("\n== sync vs async: simulated time-to-target accuracy ==")
     from repro.configs.paper_cnn import MNIST_CNN
     from repro.data.synthetic import make_image_dataset
-    from repro.fl import FLConfig, make_cnn_task, run_training
-    from repro.sim import AsyncConfig, run_async_training
+    from repro.engine import RunConfig, make_engine, run_engine
+    from repro.fl import make_cnn_task
 
     small = dataclasses.replace(
         MNIST_CNN, name="paper-cnn-mnist-bench", image_size=16,
@@ -81,31 +81,32 @@ def run(csv_rows, rounds: int = 10):
     train, test = make_image_dataset("mnist-bench", 10, 16, 1, 1200, 500, seed=0,
                                      difficulty=0.8)
     task = make_cnn_task(small, train, test, n_clients=40)
-    fl = FLConfig(n_clients=40, k=8, m=8, policy="markov", rounds=rounds,
-                  local_epochs=2, batch_size=10, eval_every=1)
+    base = RunConfig(n_clients=40, k=8, m=8, policy="markov", rounds=rounds,
+                     local_epochs=2, batch_size=10, eval_every=1)
     profile_name = "lognormal"
     mean_lat = lat_mod.get_profile(profile_name).mean_latency()
 
     t0 = time.time()
-    sync = run_training(task, fl)
+    sync = run_engine(make_engine(task, base))
     sync_s = time.time() - t0
     sim_sync_t = lat_mod.simulate_sync_duration(
-        sync["selection"], lat_mod.get_profile(profile_name),
+        sync.selection, lat_mod.get_profile(profile_name),
         jax.random.fold_in(KEY, 7),
     )
 
     t0 = time.time()
-    acfg = AsyncConfig(buffer_size=fl.k, profile=profile_name)
-    asy = run_async_training(task, fl, acfg)
+    acfg = dataclasses.replace(base, mode="async", buffer_size=base.k,
+                               profile=profile_name)
+    asy = run_engine(make_engine(task, acfg))
     async_s = time.time() - t0
 
-    acc_sync = sync["history"]["accuracy"][-1]
-    acc_async = asy["history"]["accuracy"][-1]
-    sim_async_t = asy["wall_stats"]["sim_time"]
+    acc_sync = sync.records[-1].accuracy
+    acc_async = asy.records[-1].accuracy
+    sim_async_t = asy.wall_stats["sim_time"]
     print(f"  sync : acc={acc_sync:.3f} simulated {sim_sync_t:8.1f}s "
           f"(slowest-client rounds, mean client latency {mean_lat:.2f}s)")
     print(f"  async: acc={acc_async:.3f} simulated {sim_async_t:8.1f}s "
-          f"(staleness mean {asy['wall_stats']['mean_staleness']:.2f})")
+          f"(staleness mean {asy.wall_stats['mean_staleness']:.2f})")
     csv_rows.append(("async_vs_sync_sim_time", sim_async_t * 1e6,
                      f"sync={sim_sync_t:.1f}s;acc_async={acc_async:.3f};"
                      f"acc_sync={acc_sync:.3f}"))

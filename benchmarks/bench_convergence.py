@@ -15,7 +15,8 @@ import numpy as np
 from repro.configs.paper_cnn import CNN_CONFIGS
 from repro.core import load_metric as lm
 from repro.data.synthetic import load_dataset
-from repro.fl import FLConfig, make_cnn_task, run_training
+from repro.engine import RunConfig, SyncEngine, run_engine
+from repro.fl import make_cnn_task
 from repro.fl.rounds import rounds_to_target
 
 # (dataset, noniid, target_acc, paper figure, cpu-budget scale multiplier)
@@ -44,12 +45,12 @@ def run_one(dataset: str, noniid: bool, policy: str, rounds: int, scale: float,
         cnn, train, test, 100,
         noniid_alpha=0.6 if noniid else None, seed=seed,
     )
-    fl = FLConfig(
+    cfg = RunConfig(
         n_clients=100, k=15, m=10, policy=policy, rounds=rounds,
         local_epochs=local_epochs, batch_size=batch_size,
         eval_every=max(rounds // 20, 1), seed=seed,
     )
-    return run_training(task, fl)
+    return run_engine(SyncEngine(task, cfg))
 
 
 def run_one_mini(dataset: str, noniid: bool, policy: str, rounds: int, seed: int = 0):
@@ -71,10 +72,10 @@ def run_one_mini(dataset: str, noniid: bool, policy: str, rounds: int, seed: int
     )
     task = make_cnn_task(cnn, train, test, 100,
                          noniid_alpha=0.6 if noniid else None, seed=seed)
-    fl = FLConfig(n_clients=100, k=15, m=10, policy=policy, rounds=rounds,
-                  local_epochs=2, batch_size=10,
-                  eval_every=max(rounds // 20, 1), seed=seed)
-    return run_training(task, fl)
+    cfg = RunConfig(n_clients=100, k=15, m=10, policy=policy, rounds=rounds,
+                    local_epochs=2, batch_size=10,
+                    eval_every=max(rounds // 20, 1), seed=seed)
+    return run_engine(SyncEngine(task, cfg))
 
 
 def run(csv_rows, rounds: int = 14, scale: float = 0.05, paper_scale: bool = False):
@@ -93,9 +94,9 @@ def run(csv_rows, rounds: int = 14, scale: float = 0.05, paper_scale: bool = Fal
                 out = run_one_mini(dataset, noniid, policy,
                                    max(int(rounds * mult), 6))
             dt = time.time() - t0
-            h = out["history"]
+            h = out.history()
             r2t = rounds_to_target(h, target)
-            row[policy] = (h["accuracy"][-1], r2t, out["load_stats"]["var_X"], dt)
+            row[policy] = (h["accuracy"][-1], r2t, out.load_stats["var_X"], dt)
         tag = f"{dataset}{'-noniid' if noniid else ''}"
         acc_r, r2t_r, var_r, dt_r = row["random"]
         acc_m, r2t_m, var_m, dt_m = row["markov"]

@@ -1,6 +1,7 @@
 """Scheduler scalability (the paper's decentralization claim, quantified):
-per-round wall time of the Markov decision step vs centralized oldest-age
-top-k as the fleet grows, plus the paper-relevant age histogram check.
+per-round wall time of the Markov decision step — as shipped through the
+engine's policy registry — vs centralized oldest-age top-k as the fleet
+grows, plus the paper-relevant age histogram check.
 """
 from __future__ import annotations
 
@@ -10,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import load_metric as lm
+from repro.core import load_metric as lm, make_policy
 from repro.kernels import ops
 
 KEY = jax.random.PRNGKey(0)
@@ -31,14 +32,15 @@ def run(csv_rows):
     m = 10
     for n in (10_000, 100_000, 1_000_000):
         k = int(n * 0.15)
-        probs = jnp.asarray(lm.optimal_probs(n, k, m), jnp.float32)
-        step = _markov_step(probs, m)
-        ages = jnp.zeros((n,), jnp.int32)
-        sel, ages = step(ages, KEY)  # warm
+        # the registered policy, exactly as the engines construct it
+        pol = make_policy("markov", n, k, m)
+        step = jax.jit(pol.step)
+        state = pol.init(KEY, n)
+        sel, state = step(state, KEY)  # warm
         t0 = time.time()
         for i in range(5):
-            sel, ages = step(ages, jax.random.fold_in(KEY, i))
-        jax.block_until_ready(ages)
+            sel, state = step(state, jax.random.fold_in(KEY, i))
+        jax.block_until_ready(state["ages"])
         t_markov = (time.time() - t0) / 5 * 1e6
 
         agesf = jax.random.randint(KEY, (n,), 0, 40).astype(jnp.float32)

@@ -5,6 +5,7 @@ end (and human-readable tables along the way).
   PYTHONPATH=src python -m benchmarks.run                # all, CPU-budget scale
   PYTHONPATH=src python -m benchmarks.run --only variance,roofline
   PYTHONPATH=src python -m benchmarks.run --paper-scale  # full Figs 2-4 protocol
+  PYTHONPATH=src python -m benchmarks.run --out bench.json   # strict-JSON dump
 """
 from __future__ import annotations
 
@@ -18,6 +19,8 @@ def main() -> None:
                     help="comma list: variance,scheduler,kernels,convergence,roofline,async")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--out", default=None,
+                    help="write the CSV rows as strict JSON (NaN-safe)")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -56,6 +59,17 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        from repro.engine import dump_json
+
+        dump_json(args.out, {
+            "rows": [
+                {"name": name, "us_per_call": us, "derived": derived}
+                for name, us, derived in csv_rows
+            ],
+            "total_s": time.time() - t0,
+        })
+        print("wrote", args.out)
 
 
 if __name__ == "__main__":

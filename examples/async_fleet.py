@@ -1,15 +1,19 @@
 """Asynchronous fleet simulation: the paper's Markov policy as admission
-control for a straggler-heavy edge fleet.
+control for a straggler-heavy edge fleet, driven through the unified
+engine API.
 
 Trains the same small CNN task twice — once with the synchronous FedAvg
-round loop (a round takes as long as its slowest selected client) and
-once with the event-driven FedBuff-style loop under the ``mobile``
+engine (a round takes as long as its slowest selected client) and once
+with the event-driven FedBuff-style async engine under the ``mobile``
 latency profile (heavy-tailed compute, availability windows, dropouts) —
 and reports accuracy against *simulated wall-clock seconds*, plus the
-load metric X measured on both clocks.
+load metric X measured on both clocks. The two runs differ only in the
+``mode`` field of one ``RunConfig``.
 
   PYTHONPATH=src python examples/async_fleet.py
+  PYTHONPATH=src python examples/async_fleet.py --clients 12 --k 3 --steps 3
 """
+import argparse
 import dataclasses
 
 import jax
@@ -17,12 +21,18 @@ import jax
 from repro.configs.paper_cnn import MNIST_CNN
 from repro.core import load_metric as lm
 from repro.data.synthetic import make_image_dataset
-from repro.fl import FLConfig, make_cnn_task, run_training
-from repro.sim import AsyncConfig, get_profile, run_async_training
+from repro.engine import RunConfig, make_engine, run_engine
+from repro.fl import make_cnn_task
 from repro.sim import latency as lat_mod
 
-N, K, M, STEPS = 40, 8, 8, 16
-PROFILE = "mobile"
+ap = argparse.ArgumentParser()
+ap.add_argument("--clients", type=int, default=40)
+ap.add_argument("--k", type=int, default=8)
+ap.add_argument("--m", type=int, default=8)
+ap.add_argument("--steps", type=int, default=16)
+ap.add_argument("--profile", default="mobile")
+args = ap.parse_args()
+N, K, M, STEPS, PROFILE = args.clients, args.k, args.m, args.steps, args.profile
 
 small = dataclasses.replace(
     MNIST_CNN, name="paper-cnn-mnist-ex", image_size=16,
@@ -31,27 +41,30 @@ small = dataclasses.replace(
 train, test = make_image_dataset("mnist-ex", 10, 16, 1, 1200, 500, seed=0,
                                  difficulty=0.8)
 task = make_cnn_task(small, train, test, n_clients=N)
-fl = FLConfig(n_clients=N, k=K, m=M, policy="markov", rounds=STEPS,
-              local_epochs=2, batch_size=10, eval_every=4)
+cfg = RunConfig(n_clients=N, k=K, m=M, policy="markov", rounds=STEPS,
+                local_epochs=2, batch_size=10, eval_every=max(STEPS // 4, 1))
 
 print(f"== synchronous FedAvg ({STEPS} rounds) ==")
-sync = run_training(task, fl, progress=True)
+sync = run_engine(make_engine(task, cfg), progress=True)
 
 # simulated duration of the sync run: each round waits for its slowest client
-profile = get_profile(PROFILE)
+profile = lat_mod.get_profile(PROFILE)
 sync_t = lat_mod.simulate_sync_duration(
-    sync["selection"], profile, jax.random.PRNGKey(42)
+    sync.selection, profile, jax.random.PRNGKey(42)
 )
 
 print(f"\n== asynchronous FedBuff ({STEPS} server steps, profile={PROFILE}) ==")
-acfg = AsyncConfig(buffer_size=K, profile=PROFILE, staleness_exp=0.5)
-asy = run_async_training(task, fl, acfg, progress=True)
+acfg = dataclasses.replace(
+    cfg, mode="async", buffer_size=K, profile=PROFILE,
+    aggregator_kwargs={"staleness_exp": 0.5},
+)
+asy = run_engine(make_engine(task, acfg), progress=True)
 
-ws = asy["wall_stats"]
+ws = asy.wall_stats
 print("\n== verdict ==")
-print(f"sync : acc={sync['history']['accuracy'][-1]:.3f} "
+print(f"sync : acc={sync.records[-1].accuracy:.3f} "
       f"simulated {sync_t:8.1f}s (straggler-bound rounds)")
-print(f"async: acc={asy['history']['accuracy'][-1]:.3f} "
+print(f"async: acc={asy.records[-1].accuracy:.3f} "
       f"simulated {ws['sim_time']:8.1f}s "
       f"(staleness mean {ws['mean_staleness']:.2f} max {ws['max_staleness']})")
 print(f"load metric: E[X_wall]={ws['mean_X_wall']:.2f}s "

@@ -6,6 +6,11 @@ rounds-to-target-accuracy reporting. Scaled for CPU by default; pass
   PYTHONPATH=src python examples/federated_convergence.py [--paper-scale]
 """
 import argparse
+import os
+import sys
+
+# the shared experiment helpers live in benchmarks/, next to examples/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.bench_convergence import run_one
 from repro.core import load_metric as lm
@@ -26,11 +31,11 @@ for noniid in (False, True):
     results = {}
     for policy in ("random", "markov"):
         out = run_one("mnist", noniid, policy, rounds, scale)
-        h = out["history"]
+        h = out.history()
         results[policy] = h
         print(f"  {policy:7s}: acc " +
               " ".join(f"{a:.2f}" for a in h["accuracy"][-6:]) +
-              f" | Var[X]={out['load_stats']['var_X']:.2f}")
+              f" | Var[X]={out.load_stats['var_X']:.2f}")
     for target in (0.5, 0.6, 0.7):
         rr = rounds_to_target(results["random"], target)
         rm = rounds_to_target(results["markov"], target)

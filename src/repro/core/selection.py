@@ -1,24 +1,34 @@
 """Client-selection policies.
 
-Every policy is a pair of pure functions wrapped in a ``Policy`` record:
+Every policy is a pair of pure functions wrapped in a ``Policy`` record —
+the policy protocol of the engine API:
 
     state  = policy.init(key, n)
     sel, state = policy.step(state, key)     # sel: (n,) bool
 
-All steps are jit-compatible (n, k, m static). State is a dict pytree so it
-can be checkpointed alongside the model.
+All steps are jit-compatible (n, k, m static). State is an explicit dict
+pytree so it can be checkpointed alongside the model and threaded through
+either engine.
+
+Each policy registers a ``(n, k, m, **kwargs) -> Policy`` factory in the
+``repro.engine`` registry (see the module bottom), so every name here —
+and any user-registered one — is constructible via
+``make_policy(name, n, k, m, ...)`` and a ``RunConfig(policy=name)``.
 
 Policies:
-  * ``random``      — paper's baseline [2]: exactly k uniform at random.
-  * ``markov``      — the paper's decentralized age-dependent Markov policy
-                      with the optimal probabilities of Theorem 2.
-  * ``markov_probs``— same mechanism, arbitrary user-supplied p_0..p_m
-                      (Remark 1's dropout-robust variants).
-  * ``oldest_age``  — centralized equivalent (Remark 1): top-k by age.
-  * ``round_robin`` — deterministic staggered blocks (Var[X] = 0 when k | n).
-  * ``gumbel_age``  — beyond-paper: age-weighted sampling without
-                      replacement (Gumbel top-k on beta*age), interpolating
-                      random (beta=0) -> oldest-age (beta->inf).
+  * ``random``       — paper's baseline [2]: exactly k uniform at random.
+  * ``markov``       — the paper's decentralized age-dependent Markov policy
+                       with the optimal probabilities of Theorem 2.
+  * ``markov_probs`` — same mechanism, arbitrary user-supplied p_0..p_m
+                       (Remark 1's dropout-robust variants); defaults to
+                       the Theorem-2 optimum when no probs are given.
+  * ``markov_hetero``— per-client participation rates, each client on its
+                       own Theorem-2-optimal chain (beyond paper).
+  * ``oldest_age``   — centralized equivalent (Remark 1): top-k by age.
+  * ``round_robin``  — deterministic staggered blocks (Var[X] = 0 when k | n).
+  * ``gumbel_age``   — beyond-paper: age-weighted sampling without
+                       replacement (Gumbel top-k on beta*age), interpolating
+                       random (beta=0) -> oldest-age (beta->inf).
 """
 from __future__ import annotations
 
@@ -223,20 +233,22 @@ def _advance(state: Dict, sel: jnp.ndarray) -> Dict:
 
 
 def make_policy(name: str, n: int, k: int, m: int = 10, **kw) -> Policy:
-    if name == "random":
-        return make_random(n, k)
-    if name == "markov":
-        return make_markov(n, k, m, **kw)
-    if name == "oldest_age":
-        return make_oldest_age(n, k)
-    if name == "round_robin":
-        return make_round_robin(n, k)
-    if name == "gumbel_age":
-        return make_gumbel_age(n, k, **kw)
-    raise ValueError(f"unknown policy {name!r}")
+    """Construct any registered policy by name (back-compat signature;
+    dispatches through the ``repro.engine`` registry)."""
+    from repro.engine.registry import make_policy as _dispatch
+
+    return _dispatch(name, n, k, m, **kw)
 
 
-POLICY_NAMES = ("random", "markov", "oldest_age", "round_robin", "gumbel_age")
+def default_hetero_rates(n: int, k: int, rate_spread: float = 0.0) -> np.ndarray:
+    """Per-client participation rates with mean ~k/n. ``rate_spread`` is the
+    log-range of the spread: client rates span a factor of e^rate_spread
+    between the slowest and fastest client (0 = uniform k/n)."""
+    base = k / n
+    if rate_spread == 0.0:
+        return np.full(n, base)
+    factors = np.exp(np.linspace(-rate_spread / 2, rate_spread / 2, n))
+    return np.clip(base * factors, 1e-4, 1.0)
 
 
 def simulate(policy: Policy, key: jax.Array, n: int, rounds: int) -> np.ndarray:
@@ -250,3 +262,39 @@ def simulate(policy: Policy, key: jax.Array, n: int, rounds: int) -> np.ndarray:
     keys = jax.random.split(jax.random.fold_in(key, 1), rounds)
     _, hist = jax.lax.scan(body, state, keys)
     return np.asarray(hist)
+
+
+# ---------------------------------------------------------------------------
+# Registry wiring: every policy is a named (n, k, m, **kw) -> Policy factory.
+# Imported at the bottom, after all public defs, so a partially initialized
+# repro.engine package (which itself imports this module) never bites.
+# ---------------------------------------------------------------------------
+
+from repro.engine import registry as _registry  # noqa: E402
+
+_registry.register_policy("random")(lambda n, k, m=10: make_random(n, k))
+_registry.register_policy("markov")(make_markov)
+_registry.register_policy("markov_probs")(
+    lambda n, k, m=10, probs=None, steady_start=True: make_markov(
+        n, k, m, probs=probs, steady_start=steady_start
+    )
+)
+
+
+@_registry.register_policy("markov_hetero")
+def _make_markov_hetero_by_name(
+    n: int, k: int, m: int = 10, rates=None, rate_spread: float = 0.0,
+    steady_start: bool = True,
+) -> Policy:
+    if rates is None:
+        rates = default_hetero_rates(n, k, rate_spread)
+    return make_markov_hetero(rates, m, steady_start=steady_start)
+
+
+_registry.register_policy("oldest_age")(lambda n, k, m=10: make_oldest_age(n, k))
+_registry.register_policy("round_robin")(lambda n, k, m=10: make_round_robin(n, k))
+_registry.register_policy("gumbel_age")(
+    lambda n, k, m=10, beta=1.0: make_gumbel_age(n, k, beta=beta)
+)
+
+POLICY_NAMES = _registry.policy_names()

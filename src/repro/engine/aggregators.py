@@ -1,0 +1,152 @@
+"""Pluggable server-side aggregation: pure ``init/accumulate/finalize``.
+
+An ``Aggregator`` owns everything between "the cohort's local updates are
+stacked on axis 0" and "here are the new global params", so the sync and
+async engines share one aggregation seam instead of hardwiring their own:
+
+    w     = agg.weigh(mask, staleness)        # (B,) float32 weights
+    acc   = agg.init(global_params)           # accumulator pytree
+    acc   = agg.accumulate(acc, updates, bases, w)
+    new_g = agg.finalize(global_params, acc)
+
+``updates`` / ``bases`` are pytrees with a stacked cohort axis: ``bases``
+is the params each cohort member trained *from* (the broadcast global in
+the sync engine, the dispatch-time ring-buffer version in the async one),
+which is what lets delta-based aggregators express staleness correctly.
+All functions are jit-compatible and safe to call with an all-zero weight
+vector (an empty buffer leaves the global params untouched).
+
+Built-ins:
+  * ``fedavg``  — weighted mean of the updated params (the paper's FedAvg
+                  step (iii)); ignores staleness.
+  * ``fedbuff`` — staleness-discounted mean of *deltas* added to the
+                  global params (FedBuff/FedAsync style, ``(1+s)^-a``).
+  * ``fedprox`` — fedbuff with server-side proximal damping: the mean
+                  delta is scaled by ``1/(1+mu)``, i.e. the new params
+                  minimize ``||p - (g + d)||^2 + mu * ||p - g||^2``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.registry import register_aggregator
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """The aggregation protocol both engines dispatch through."""
+
+    name: str
+    weigh: Callable  # (mask bool (B,), staleness i32 (B,)) -> f32 (B,)
+    init: Callable  # (global_params) -> acc pytree
+    accumulate: Callable  # (acc, updates, bases, weights) -> acc
+    finalize: Callable  # (global_params, acc) -> new global_params
+
+
+def staleness_weight(
+    s: jnp.ndarray, mode: str = "poly", exp: float = 0.5
+) -> jnp.ndarray:
+    """Aggregation discount for an update of staleness ``s`` versions."""
+    s = jnp.maximum(s.astype(jnp.float32), 0.0)
+    if mode == "const":
+        return jnp.ones_like(s)
+    if mode == "poly":
+        return (1.0 + s) ** (-exp)
+    raise ValueError(f"unknown staleness mode {mode!r}")
+
+
+def _wshape(u: jnp.ndarray) -> tuple:
+    return (-1,) + (1,) * (u.ndim - 1)
+
+
+@register_aggregator("fedavg")
+def make_fedavg() -> Aggregator:
+    """Weighted mean of updated params; empty cohorts keep the old params."""
+
+    def weigh(mask, staleness):
+        return mask.astype(jnp.float32)
+
+    def init(g):
+        return {
+            "usum": jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), g),
+            "wsum": jnp.zeros((), jnp.float32),
+        }
+
+    def accumulate(acc, updates, bases, w):
+        usum = jax.tree.map(
+            lambda s, u: s + jnp.sum(u * w.reshape(_wshape(u)).astype(u.dtype), axis=0),
+            acc["usum"], updates,
+        )
+        return {"usum": usum, "wsum": acc["wsum"] + w.sum()}
+
+    def finalize(g, acc):
+        empty = acc["wsum"] == 0.0
+        denom = jnp.maximum(acc["wsum"], 1.0)
+
+        def fin(gl, s):
+            return jnp.where(empty, gl, (s / denom.astype(s.dtype)).astype(gl.dtype))
+
+        return jax.tree.map(fin, g, acc["usum"])
+
+    return Aggregator("fedavg", weigh, init, accumulate, finalize)
+
+
+def _delta_aggregator(name: str, staleness_mode: str, staleness_exp: float,
+                      scale: float) -> Aggregator:
+    """Shared core of fedbuff/fedprox: staleness-weighted mean delta,
+    scaled by ``scale`` and added to the global params."""
+
+    def weigh(mask, staleness):
+        return mask.astype(jnp.float32) * staleness_weight(
+            staleness, staleness_mode, staleness_exp
+        )
+
+    def init(g):
+        return {
+            "dsum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), g),
+            "wsum": jnp.zeros((), jnp.float32),
+        }
+
+    def accumulate(acc, updates, bases, w):
+        dsum = jax.tree.map(
+            lambda s, u, b: s
+            + jnp.sum((u - b).astype(jnp.float32) * w.reshape(_wshape(u)), axis=0),
+            acc["dsum"], updates, bases,
+        )
+        return {"dsum": dsum, "wsum": acc["wsum"] + w.sum()}
+
+    def finalize(g, acc):
+        has = acc["wsum"] > 0
+        denom = jnp.maximum(acc["wsum"], 1e-9)
+
+        def fin(gl, s):
+            d = s / denom
+            if scale != 1.0:
+                d = d * scale
+            upd = gl + d.astype(gl.dtype)
+            return jnp.where(has, upd, gl)
+
+        return jax.tree.map(fin, g, acc["dsum"])
+
+    return Aggregator(name, weigh, init, accumulate, finalize)
+
+
+@register_aggregator("fedbuff")
+def make_fedbuff(staleness_mode: str = "poly", staleness_exp: float = 0.5) -> Aggregator:
+    """Staleness-discounted buffered delta aggregation (FedBuff-style)."""
+    return _delta_aggregator("fedbuff", staleness_mode, staleness_exp, scale=1.0)
+
+
+@register_aggregator("fedprox")
+def make_fedprox(prox_mu: float = 0.1, staleness_mode: str = "poly",
+                 staleness_exp: float = 0.5) -> Aggregator:
+    """Proximally damped delta aggregation: mean delta scaled by 1/(1+mu)."""
+    if prox_mu < 0:
+        raise ValueError(f"prox_mu must be >= 0, got {prox_mu}")
+    return _delta_aggregator(
+        "fedprox", staleness_mode, staleness_exp, scale=1.0 / (1.0 + prox_mu)
+    )

@@ -1,0 +1,80 @@
+"""The ``Engine`` protocol and the one run loop both engines share.
+
+An engine is anything with ``init/step/finalize`` (plus the small
+``eval_params/record/progress_line`` hooks the loop uses); ``run_engine``
+drives it for ``cfg.rounds`` steps, collects the selection history and
+eval records on the configured cadence, and returns a typed ``RunResult``
+— identical schema for sync and async.
+
+    cfg = RunConfig(mode="async", policy="markov", aggregator="fedbuff")
+    result = run_engine(make_engine(task, cfg), progress=True)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.engine.config import RoundRecord, RunConfig, RunResult
+
+# collect the full (steps, n) selection matrix only below this cell count
+HISTORY_CELL_CAP = 4_000_000
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """The contract ``run_engine`` drives."""
+
+    task: object
+    cfg: RunConfig
+
+    def init(self) -> Dict: ...
+
+    def step(self, state: Dict, r: int) -> Tuple[Dict, Dict]: ...
+
+    def eval_params(self, state: Dict): ...
+
+    def record(self, r: int, aux: Dict, ev: Dict) -> RoundRecord: ...
+
+    def progress_line(self, rec: RoundRecord, elapsed: float) -> str: ...
+
+    def finalize(self, state, records, sel_hist, wall_time_s) -> RunResult: ...
+
+
+def make_engine(task, cfg: RunConfig, policy=None, aggregator=None) -> Engine:
+    """Instantiate the engine matching ``cfg.mode``."""
+    if cfg.mode == "sync":
+        from repro.engine.sync import SyncEngine
+
+        return SyncEngine(task, cfg, policy=policy, aggregator=aggregator)
+    from repro.engine.async_engine import AsyncEngine
+
+    return AsyncEngine(task, cfg, policy=policy, aggregator=aggregator)
+
+
+def run_engine(engine: Engine, progress: bool = False) -> RunResult:
+    """Drive an engine for ``cfg.rounds`` steps and package the result."""
+    cfg = engine.cfg
+    steps = cfg.rounds
+    state = engine.init()
+    # sync runs always keep the selection matrix (load_stats depend on it,
+    # matching the pre-engine loop); async fleets can be orders of
+    # magnitude larger, so they cap as the old async loop did
+    keep_hist = cfg.mode == "sync" or steps * cfg.n_clients <= HISTORY_CELL_CAP
+    sel_hist: Optional[np.ndarray] = (
+        np.zeros((steps, cfg.n_clients), dtype=bool) if keep_hist else None
+    )
+    records = []
+    t0 = time.time()
+    for r in range(steps):
+        state, aux = engine.step(state, r)
+        if keep_hist:
+            sel_hist[r] = np.asarray(aux["send"])
+        if (r + 1) % cfg.eval_every == 0 or r == steps - 1:
+            ev = engine.task.eval_fn(engine.eval_params(state))
+            rec = engine.record(r, aux, ev)
+            records.append(rec)
+            if progress:
+                print(engine.progress_line(rec, time.time() - t0), flush=True)
+    return engine.finalize(state, records, sel_hist, time.time() - t0)

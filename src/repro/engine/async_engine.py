@@ -1,0 +1,305 @@
+"""The buffered asynchronous engine over the event-driven fleet simulator.
+
+One jit'd server step = admission control (idle+available clients consult
+their selection policy — the Markov chain decides *locally* whether to
+pull the model, preserving the paper's zero-coordination property) ->
+dispatch with sampled wall-clock latencies -> pop the next ``buffer_size``
+completions (event_topk kernel at fleet scale) -> vmapped local training
+from each client's *dispatch-time* model version (a ring buffer of the
+last ``max_versions`` global models) -> aggregator
+``weigh/init/accumulate/finalize`` over the buffered deltas -> clock/
+version advance.
+
+This is ``sim/async_rounds.py`` re-expressed against the ``Engine``
+protocol with the aggregation seam opened up: the default ``fedbuff``
+aggregator reproduces the pre-refactor staleness-discounted delta mean
+bit-for-bit (pinned by ``tests/test_engine_equivalence.py``). With the
+degenerate ``uniform`` latency profile (zero spread, always available, no
+dropout) and ``buffer_size = k`` every dispatch completes inside its own
+step with staleness 0, and the loop reproduces the synchronous FedAvg
+round of ``SyncEngine`` exactly.
+
+The load metric is reported on two clocks: X in decision epochs (the
+paper's round-indexed Var[X]) and X in simulated seconds (wall-clock
+inter-update gaps per client), which is where stragglers and availability
+windows actually show up.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aoi import age_update, peak_age_accumulate
+from repro.core.load_metric import empirical_load_stats
+from repro.core.selection import Policy
+from repro.engine.aggregators import Aggregator
+from repro.engine.config import RoundRecord, RunConfig, RunResult
+from repro.engine.registry import make_aggregator, make_policy
+from repro.fl.client import make_local_update
+from repro.fl.task import FLTask
+from repro.optim.schedules import exponential_decay
+from repro.sim import events as ev_mod
+from repro.sim import latency as lat_mod
+
+
+def _resolved_profile(profile) -> lat_mod.LatencyProfile:
+    if isinstance(profile, lat_mod.LatencyProfile):
+        return profile
+    return lat_mod.get_profile(profile)
+
+
+def _init_stats() -> Dict[str, jnp.ndarray]:
+    z = jnp.zeros((), jnp.float32)
+    return {
+        "wall_sx": z, "wall_sx2": z, "wall_cnt": z,  # X in simulated seconds
+        "ep_sx": z, "ep_sx2": z, "ep_cnt": z,  # X in decision epochs
+        "stale_sum": z, "stale_cnt": z,
+        "stale_max": jnp.zeros((), jnp.int32),
+        "updates": z,  # successful updates aggregated
+        "aggs": z,  # server versions produced
+    }
+
+
+class AsyncEngine:
+    """Asynchronous server steps: one buffer flush per step, clients train
+    from (possibly stale) ring-buffered model versions."""
+
+    def __init__(
+        self,
+        task: FLTask,
+        cfg: RunConfig,
+        policy: Optional[Policy] = None,
+        aggregator: Optional[Aggregator] = None,
+    ):
+        if cfg.mode != "async":
+            raise ValueError(f"AsyncEngine needs mode='async', got {cfg.mode!r}")
+        self.task = task
+        self.cfg = cfg
+        self.policy = policy or make_policy(
+            cfg.policy, cfg.n_clients, cfg.k, cfg.m, **dict(cfg.policy_kwargs)
+        )
+        self.aggregator = aggregator or make_aggregator(
+            cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
+        )
+        self.profile = _resolved_profile(cfg.profile)
+        self._init_state, self._step_fn = _make_async_step(
+            task, cfg, self.policy, self.aggregator, self.profile
+        )
+
+    def init(self) -> Dict:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        k_init, k_policy, k_run = jax.random.split(key, 3)
+        params = self.task.init(k_init)
+        sched = self.policy.init(k_policy, cfg.n_clients)
+        state = self._init_state(params, sched, jax.random.fold_in(k_run, 2**31))
+        state["k_run"] = k_run
+        return state
+
+    def step(self, state: Dict, r: int):
+        k_run = state["k_run"]
+        jstate = {k: v for k, v in state.items() if k != "k_run"}
+        jstate, aux = self._step_fn(jstate, jax.random.fold_in(k_run, r))
+        jstate["k_run"] = k_run
+        return jstate, aux
+
+    def eval_params(self, state: Dict):
+        return state["params"]
+
+    def record(self, r: int, aux: Dict, ev: Dict) -> RoundRecord:
+        return RoundRecord(
+            round=r + 1,
+            train_loss=float(aux["loss"]),
+            eval_loss=float(ev["loss"]),
+            accuracy=float(ev["accuracy"]),
+            clock=float(aux["clock"]),
+            version=int(aux["version"]),
+            buffer_fill=int(aux["buffer_fill"]),
+        )
+
+    def progress_line(self, rec: RoundRecord, elapsed: float) -> str:
+        return (
+            f"  [{self.policy.name}/{self.profile.name}] "
+            f"step {rec.round:4d} t={rec.clock:9.2f}s v={rec.version:4d} "
+            f"acc={rec.accuracy:.4f} loss={rec.eval_loss:.4f} ({elapsed:.1f}s)"
+        )
+
+    def finalize(self, state, records, sel_hist, wall_time_s) -> RunResult:
+        st = {k: float(v) for k, v in state["stats"].items()}
+
+        def _mv(sx, sx2, cnt):
+            if cnt <= 0:
+                return float("nan"), float("nan")
+            mean = sx / cnt
+            return mean, max(sx2 / cnt - mean * mean, 0.0)
+
+        mean_w, var_w = _mv(st["wall_sx"], st["wall_sx2"], st["wall_cnt"])
+        mean_e, var_e = _mv(st["ep_sx"], st["ep_sx2"], st["ep_cnt"])
+        wall_stats = {
+            "mean_X_wall": mean_w, "var_X_wall": var_w,
+            "num_samples_wall": int(st["wall_cnt"]),
+            "mean_X_epoch": mean_e, "var_X_epoch": var_e,
+            "num_samples_epoch": int(st["ep_cnt"]),
+            "mean_staleness": st["stale_sum"] / max(st["stale_cnt"], 1.0),
+            "max_staleness": int(st["stale_max"]),
+            "updates_applied": int(st["updates"]),
+            "aggregations": int(st["aggs"]),
+            "sim_time": float(state["clock"]),
+        }
+        return RunResult(
+            config=self.cfg,
+            records=records,
+            selection=sel_hist,
+            load_stats=empirical_load_stats(sel_hist) if sel_hist is not None else {},
+            wall_stats=wall_stats,
+            params=state["params"],
+            wall_time_s=wall_time_s,
+        )
+
+
+def _make_async_step(
+    task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
+    profile: lat_mod.LatencyProfile,
+):
+    """Builds (init_state, step). ``step(state, key) -> (state, aux)``."""
+    n = cfg.n_clients
+    B = cfg.resolved_buffer_size()
+    H = cfg.max_versions
+    local_update = make_local_update(
+        task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
+    )
+    lr_fn = exponential_decay(cfg.lr0, cfg.lr_decay)
+
+    def init_state(params, sched_state, key):
+        return {
+            "params": params,
+            # ring buffer of the last H global models; slot v % H = version v
+            "hist": jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (H,) + p.shape), params
+            ),
+            "sched": sched_state,
+            "ev": ev_mod.init_event_state(n),
+            "speed": lat_mod.client_speed(key, n, profile),
+            "clock": jnp.zeros((), jnp.float32),
+            "version": jnp.zeros((), jnp.int32),
+            "stats": _init_stats(),
+        }
+
+    @jax.jit
+    def step(state, key):
+        ev, sched, stats = state["ev"], state["sched"], state["stats"]
+        clock, version = state["clock"], state["version"]
+        # same key split as the sync round so the degenerate case is
+        # bit-for-bit comparable; latency/dropout/gap keys are fresh folds
+        k_sel, k_local = jax.random.split(key)
+        k_lat = jax.random.fold_in(k_sel, 101)
+        k_drop = jax.random.fold_in(k_sel, 102)
+        k_gap = jax.random.fold_in(k_sel, 103)
+
+        # --- admission control: idle+available clients consult the policy
+        prev_ages = sched["ages"]
+        idle = jnp.isinf(ev["t_done"])
+        available = ev["next_avail"] <= clock
+        want, sched = policy.step(sched, k_sel)
+        send = want & idle & available
+        # only actual dispatches reset the AoI clock; everyone else ages
+        sched = {**sched, "ages": age_update(prev_ages, send)}
+        ep_sx, ep_sx2, ep_cnt = peak_age_accumulate(
+            prev_ages, send, stats["ep_sx"], stats["ep_sx2"], stats["ep_cnt"]
+        )
+
+        # --- dispatch: sample wall-clock latencies, mark in flight
+        latency = lat_mod.sample_latency(k_lat, profile, state["speed"])
+        dropped = lat_mod.sample_dropout(k_drop, profile, n)
+        ev = ev_mod.schedule_completions(ev, send, clock, latency, version, dropped)
+
+        # --- pop the next B completions, advance the simulated clock
+        t_ev, idx, valid, ev = ev_mod.pop_events(ev, B, use_kernel=cfg.use_kernel)
+        new_clock = jnp.maximum(clock, jnp.max(jnp.where(valid, t_ev, -jnp.inf)))
+        # an all-idle fleet inside availability gaps must not freeze the
+        # clock: with nothing in flight to pop, jump to the earliest
+        # window opening so availability can recover next step
+        new_clock = jnp.where(
+            valid.any(), new_clock,
+            jnp.maximum(new_clock, jnp.min(ev["next_avail"])),
+        )
+
+        # --- local training from each client's dispatch-time model
+        disp_ver = ev["disp_ver"][idx]
+        # versions older than the ring are trained from the oldest retained
+        # model; staleness for weighting still uses the true dispatch version
+        read_ver = jnp.clip(disp_ver, jnp.maximum(version - (H - 1), 0), version)
+        disp_params = jax.tree.map(lambda h: h[read_ver % H], state["hist"])
+        shards = jax.tree.map(lambda a: a[idx], task.client_data)
+        keys = jax.random.split(k_local, B)
+        lr = lr_fn(jnp.maximum(disp_ver, 0))
+        updated, losses = jax.vmap(local_update, in_axes=(0, 0, 0, 0))(
+            disp_params, shards, keys, lr
+        )
+
+        # --- buffered aggregation of deltas through the aggregator seam
+        succ = valid & ~ev["dropped"][idx]
+        staleness = jnp.maximum(version - disp_ver, 0)
+        w = agg.weigh(succ, staleness)
+        wsum = w.sum()
+        has = wsum > 0
+        denom = jnp.maximum(wsum, 1e-9)
+        acc = agg.accumulate(agg.init(state["params"]), updated, disp_params, w)
+        params = agg.finalize(state["params"], acc)
+        version = version + has.astype(jnp.int32)
+        hist = jax.tree.map(
+            lambda h, p: h.at[version % H].set(p), state["hist"], params
+        )
+        # NaN, not a fake 0.0 datapoint, when nothing was aggregated
+        mean_loss = jnp.where(has, jnp.sum(losses * w) / denom, jnp.nan)
+
+        # --- completed clients go idle; wall-clock AoI samples
+        # gaps are i.i.d. — draw only the B popped clients' worth
+        gaps = lat_mod.sample_avail_gap(k_gap, profile, B)
+        ev = {
+            **ev,
+            "next_avail": ev["next_avail"]
+            .at[ev_mod.scatter_idx(idx, valid)]
+            .set(new_clock + gaps, mode="drop"),
+        }
+        x_wall = t_ev - ev["last_done"][idx]
+        wall_ok = succ & (ev["last_done"][idx] >= 0.0)
+        wall_okf = wall_ok.astype(jnp.float32)
+        ev = {
+            **ev,
+            "last_done": ev["last_done"]
+            .at[ev_mod.scatter_idx(idx, succ)]
+            .set(t_ev, mode="drop"),
+        }
+
+        stats = {
+            "wall_sx": stats["wall_sx"] + jnp.sum(jnp.where(wall_ok, x_wall, 0.0)),
+            "wall_sx2": stats["wall_sx2"] + jnp.sum(jnp.where(wall_ok, x_wall**2, 0.0)),
+            "wall_cnt": stats["wall_cnt"] + wall_okf.sum(),
+            "ep_sx": ep_sx, "ep_sx2": ep_sx2, "ep_cnt": ep_cnt,
+            "stale_sum": stats["stale_sum"]
+            + jnp.sum(jnp.where(succ, staleness, 0).astype(jnp.float32)),
+            "stale_cnt": stats["stale_cnt"] + succ.astype(jnp.float32).sum(),
+            "stale_max": jnp.maximum(
+                stats["stale_max"], jnp.max(jnp.where(succ, staleness, 0))
+            ),
+            "updates": stats["updates"] + succ.astype(jnp.float32).sum(),
+            "aggs": stats["aggs"] + has.astype(jnp.float32),
+        }
+        state = {
+            **state,
+            "params": params, "hist": hist, "sched": sched, "ev": ev,
+            "clock": new_clock, "version": version, "stats": stats,
+        }
+        aux = {
+            "send": send,
+            "loss": mean_loss,
+            "buffer_fill": valid.astype(jnp.int32).sum(),
+            "clock": new_clock,
+            "version": version,
+        }
+        return state, aux
+
+    return init_state, step

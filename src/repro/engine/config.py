@@ -1,0 +1,176 @@
+"""One run contract for synchronous and asynchronous federated training.
+
+``RunConfig`` absorbs the old ``FLConfig`` + ``AsyncConfig`` pair: every
+field the sync round loop and the event-driven async loop need, plus the
+registry names (and kwargs) of the selection policy and the aggregator.
+``RunResult`` / ``RoundRecord`` are the typed output schema both engines
+emit identically; ``repro.engine.serialize.to_jsonable`` is the one
+JSON-safe serializer for all of it (NaN -> null, numpy -> builtin).
+
+This module is deliberately dependency-free (dataclasses + numpy only) so
+configs can be built, validated, and serialized without importing jax or
+the simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+MODES = ("sync", "async")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything needed to reproduce one federated run, either engine."""
+
+    # --- fleet + schedule (paper Sec. IV defaults) ---
+    n_clients: int = 100
+    k: int = 15  # paper: 15% participation
+    m: int = 10  # max permissible age (Markov policy)
+    policy: str = "markov"  # any name in repro.engine.policy_names()
+    policy_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    rounds: int = 100  # sync rounds / async server steps
+    local_epochs: int = 5
+    batch_size: int = 50
+    lr0: float = 0.1
+    lr_decay: float = 0.998
+    seed: int = 0
+    # cohort padding for variable-size policies (markov): vmap width
+    max_cohort: Optional[int] = None
+    eval_every: int = 1
+
+    # --- engine ---
+    mode: str = "sync"  # sync | async
+    # None -> per-mode default: fedavg (sync) / fedbuff (async)
+    aggregator: Optional[str] = None
+    aggregator_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # --- async engine only ---
+    buffer_size: Optional[int] = None  # aggregation buffer; default k
+    max_versions: int = 8  # ring of retained global models
+    profile: Any = "lognormal"  # name or sim.latency.LatencyProfile
+    use_kernel: Optional[bool] = None  # None: kernel when fleet is large
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if not 0 < self.k <= self.n_clients:
+            raise ValueError(
+                f"k={self.k} must be in 1..n_clients={self.n_clients}"
+            )
+        if self.max_cohort is not None and self.max_cohort < self.k:
+            raise ValueError(
+                f"max_cohort={self.max_cohort} < k={self.k}: the cohort "
+                "buffer could not hold even an exact-k selection; raise "
+                "max_cohort (or leave it None for the binomial-tail default)"
+            )
+
+    def cohort_width(self) -> int:
+        """Padded cohort buffer width for variable-size policies."""
+        if self.max_cohort is not None:
+            return self.max_cohort
+        return default_cohort_width(self.n_clients, self.k)
+
+    def resolved_aggregator(self) -> str:
+        if self.aggregator is not None:
+            return self.aggregator
+        return "fedavg" if self.mode == "sync" else "fedbuff"
+
+    def resolved_buffer_size(self) -> int:
+        return self.buffer_size or self.k
+
+    def profile_name(self) -> str:
+        return self.profile if isinstance(self.profile, str) else self.profile.name
+
+
+def default_cohort_width(n_clients: int, k: int) -> int:
+    """Markov cohort is ~Binomial(n, k/n): pad to k + 4*sigma (overflow
+    beyond the buffer is dropped, so the tail allowance matters)."""
+    q = k / n_clients
+    sigma = math.sqrt(n_clients * q * (1 - q))
+    return min(n_clients, int(k + 4 * sigma) + 1)
+
+
+def run_config_from_legacy(fl, acfg=None, **overrides) -> RunConfig:
+    """Build a RunConfig from the legacy ``FLConfig`` (+ ``AsyncConfig``)
+    pair. ``acfg`` switches the mode to async and maps its staleness
+    knobs onto the fedbuff aggregator's kwargs."""
+    kw: Dict[str, Any] = dict(
+        n_clients=fl.n_clients, k=fl.k, m=fl.m, policy=fl.policy,
+        rounds=fl.rounds, local_epochs=fl.local_epochs,
+        batch_size=fl.batch_size, lr0=fl.lr0, lr_decay=fl.lr_decay,
+        seed=fl.seed, max_cohort=fl.max_cohort, eval_every=fl.eval_every,
+    )
+    if acfg is not None:
+        kw.update(
+            mode="async",
+            aggregator="fedbuff",
+            aggregator_kwargs={
+                "staleness_mode": acfg.staleness_mode,
+                "staleness_exp": acfg.staleness_exp,
+            },
+            buffer_size=acfg.buffer_size,
+            max_versions=acfg.max_versions,
+            profile=acfg.profile,
+            use_kernel=acfg.use_kernel,
+        )
+    kw.update(overrides)
+    return RunConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Result schema
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One evaluated round / server step, identical for both engines.
+
+    ``clock``/``version``/``buffer_fill`` are simulator quantities and stay
+    None under the sync engine.
+    """
+
+    round: int
+    train_loss: float
+    eval_loss: float
+    accuracy: float
+    clock: Optional[float] = None
+    version: Optional[int] = None
+    buffer_fill: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Typed output of ``repro.engine.run_engine`` for either mode."""
+
+    config: RunConfig
+    records: List[RoundRecord]
+    selection: Optional[np.ndarray]  # (rounds, n) bool, None above cell cap
+    load_stats: Dict[str, float]  # empirical Var[X] etc. from selection
+    wall_stats: Optional[Dict[str, float]]  # async-only simulator stats
+    params: Any
+    wall_time_s: float
+
+    def history(self) -> Dict[str, list]:
+        """Legacy column-oriented history view of the records."""
+        cols = ["round", "accuracy", "eval_loss", "train_loss"]
+        if self.config.mode == "async":
+            cols = ["round", "clock", "version", "accuracy", "eval_loss",
+                    "train_loss", "buffer_fill"]
+        return {c: [getattr(r, c) for r in self.records] for c in cols}
+
+    def to_jsonable(self) -> Dict[str, Any]:
+        """JSON-safe payload (excludes params and the raw selection matrix)."""
+        from repro.engine.serialize import to_jsonable
+
+        return to_jsonable({
+            "config": dataclasses.asdict(self.config),
+            "history": self.history(),
+            "load_stats": self.load_stats,
+            "wall_stats": self.wall_stats,
+            "wall_time_s": self.wall_time_s,
+        })

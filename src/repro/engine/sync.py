@@ -1,0 +1,126 @@
+"""The synchronous FedAvg engine.
+
+One jit'd step = policy step -> cohort gather -> vmapped local training ->
+aggregator ``weigh/init/accumulate/finalize`` -> age update. This is the
+round loop of ``fl/rounds.py`` re-expressed against the ``Engine``
+protocol (`init/step/finalize`) with the aggregation seam opened up: the
+default ``fedavg`` aggregator reproduces the pre-refactor weighted cohort
+mean bit-for-bit (pinned by ``tests/test_engine_equivalence.py``), while
+delta-based aggregators (``fedprox``) drop in without touching this file.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.load_metric import empirical_load_stats
+from repro.core.selection import Policy
+from repro.engine.aggregators import Aggregator
+from repro.engine.config import RoundRecord, RunConfig, RunResult
+from repro.engine.registry import make_aggregator, make_policy
+from repro.fl.client import make_local_update
+from repro.fl.server import broadcast_to_cohort, cohort_indices
+from repro.fl.task import FLTask
+from repro.optim.schedules import exponential_decay
+
+
+class SyncEngine:
+    """Synchronous rounds: every selected client trains from the current
+    global params and the buffer is flushed once per round."""
+
+    def __init__(
+        self,
+        task: FLTask,
+        cfg: RunConfig,
+        policy: Optional[Policy] = None,
+        aggregator: Optional[Aggregator] = None,
+    ):
+        if cfg.mode != "sync":
+            raise ValueError(f"SyncEngine needs mode='sync', got {cfg.mode!r}")
+        self.task = task
+        self.cfg = cfg
+        self.policy = policy or make_policy(
+            cfg.policy, cfg.n_clients, cfg.k, cfg.m, **dict(cfg.policy_kwargs)
+        )
+        self.aggregator = aggregator or make_aggregator(
+            cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
+        )
+        self._round_fn = _make_round_fn(task, cfg, self.policy, self.aggregator)
+
+    def init(self) -> Dict:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        k_init, k_policy, k_run = jax.random.split(key, 3)
+        return {
+            "params": self.task.init(k_init),
+            "sched": self.policy.init(k_policy, cfg.n_clients),
+            "k_run": k_run,
+        }
+
+    def step(self, state: Dict, r: int):
+        params, sched, selected, loss = self._round_fn(
+            state["params"], state["sched"],
+            jax.random.fold_in(state["k_run"], r),
+        )
+        state = {**state, "params": params, "sched": sched}
+        return state, {"send": selected, "loss": loss}
+
+    def eval_params(self, state: Dict):
+        return state["params"]
+
+    def record(self, r: int, aux: Dict, ev: Dict) -> RoundRecord:
+        return RoundRecord(
+            round=r + 1,
+            train_loss=float(aux["loss"]),
+            eval_loss=float(ev["loss"]),
+            accuracy=float(ev["accuracy"]),
+        )
+
+    def progress_line(self, rec: RoundRecord, elapsed: float) -> str:
+        return (
+            f"  [{self.policy.name}] round {rec.round:4d} "
+            f"acc={rec.accuracy:.4f} loss={rec.eval_loss:.4f} ({elapsed:.1f}s)"
+        )
+
+    def finalize(self, state, records, sel_hist, wall_time_s) -> RunResult:
+        return RunResult(
+            config=self.cfg,
+            records=records,
+            selection=sel_hist,
+            load_stats=empirical_load_stats(sel_hist) if sel_hist is not None else {},
+            wall_stats=None,
+            params=state["params"],
+            wall_time_s=wall_time_s,
+        )
+
+
+def _make_round_fn(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator):
+    width = cfg.cohort_width() if not policy.exact_k else cfg.k
+    local_update = make_local_update(
+        task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
+    )
+    lr_fn = exponential_decay(cfg.lr0, cfg.lr_decay)
+
+    @jax.jit
+    def round_fn(params, sched_state, key):
+        k_sel, k_local = jax.random.split(key)
+        selected, sched_state = policy.step(sched_state, k_sel)
+        idx, mask = cohort_indices(selected, width)
+        shards = jax.tree.map(lambda a: a[idx], task.client_data)
+        lr = lr_fn(sched_state["round"] - 1)
+        cohort_params = broadcast_to_cohort(params, width)
+        keys = jax.random.split(k_local, width)
+        updated, losses = jax.vmap(local_update, in_axes=(0, 0, 0, None))(
+            cohort_params, shards, keys, lr
+        )
+        # sync cohorts are never stale: staleness is identically zero
+        w = agg.weigh(mask > 0, jnp.zeros_like(idx))
+        acc = agg.accumulate(agg.init(params), updated, cohort_params, w)
+        params = agg.finalize(params, acc)
+        mean_loss = jnp.sum(losses * w) / jnp.maximum(w.sum(), 1.0)
+        return params, sched_state, selected, mean_loss
+
+    return round_fn

@@ -1,53 +1,30 @@
-"""The FedAvg round loop with pluggable client selection.
+"""Back-compat wrappers over the unified engine (``repro.engine``).
 
-One jit'd round = policy step -> cohort gather -> vmapped local training ->
-masked FedAvg aggregation -> age update. The selection history is streamed
-back to host for load-metric statistics (Var[X], cohort sizes) — the
-quantities the paper's Figs. 2-4 and Theorems 1-2 are about.
+The FedAvg round loop that used to live here is now ``SyncEngine`` in
+``repro.engine.sync``, driven through the one ``RunConfig``/``RunResult``
+contract shared with the async engine. ``run_training`` keeps the legacy
+signature and returns the legacy history dict, reproducing the
+pre-refactor loop bit-for-bit on fixed seeds (pinned by
+``tests/test_engine_equivalence.py``).
 """
 from __future__ import annotations
 
-import time
-from functools import partial
 from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import empirical_load_stats
-from repro.core.selection import Policy, make_policy
-from repro.fl.client import make_local_update
+from repro.core.selection import Policy
 from repro.fl.config import FLConfig
-from repro.fl.server import broadcast_to_cohort, cohort_indices, fedavg_aggregate
 from repro.fl.task import FLTask
-from repro.optim.schedules import exponential_decay
 
 
 def make_round_fn(task: FLTask, fl: FLConfig, policy: Policy):
-    width = fl.cohort_width() if not policy.exact_k else fl.k
-    local_update = make_local_update(
-        task.loss_fn, fl.local_epochs, fl.batch_size, task.examples_per_client
-    )
-    lr_fn = exponential_decay(fl.lr0, fl.lr_decay)
+    """One jit'd FedAvg round (legacy helper): policy step -> cohort gather
+    -> vmapped local training -> fedavg aggregation -> age update."""
+    from repro.engine.config import run_config_from_legacy
+    from repro.engine.registry import make_aggregator
+    from repro.engine.sync import _make_round_fn
 
-    @jax.jit
-    def round_fn(params, sched_state, key):
-        k_sel, k_local = jax.random.split(key)
-        selected, sched_state = policy.step(sched_state, k_sel)
-        idx, weights = cohort_indices(selected, width)
-        shards = jax.tree.map(lambda a: a[idx], task.client_data)
-        lr = lr_fn(sched_state["round"] - 1)
-        cohort_params = broadcast_to_cohort(params, width)
-        keys = jax.random.split(k_local, width)
-        updated, losses = jax.vmap(local_update, in_axes=(0, 0, 0, None))(
-            cohort_params, shards, keys, lr
-        )
-        params = fedavg_aggregate(params, updated, weights)
-        mean_loss = jnp.sum(losses * weights) / jnp.maximum(weights.sum(), 1.0)
-        return params, sched_state, selected, mean_loss
-
-    return round_fn
+    cfg = run_config_from_legacy(fl)
+    return _make_round_fn(task, cfg, policy, make_aggregator("fedavg"))
 
 
 def run_training(
@@ -58,40 +35,18 @@ def run_training(
 ) -> Dict:
     """Full FL run. Returns history dict with per-round eval metrics and
     the load-metric statistics of the realized selection history."""
-    key = jax.random.PRNGKey(fl.seed)
-    k_init, k_policy, k_run = jax.random.split(key, 3)
-    policy = policy or make_policy(fl.policy, fl.n_clients, fl.k, fl.m)
-    params = task.init(k_init)
-    sched_state = policy.init(k_policy, fl.n_clients)
-    round_fn = make_round_fn(task, fl, policy)
+    from repro.engine.api import run_engine
+    from repro.engine.config import run_config_from_legacy
+    from repro.engine.sync import SyncEngine
 
-    history = {"round": [], "accuracy": [], "eval_loss": [], "train_loss": []}
-    sel_hist = np.zeros((fl.rounds, fl.n_clients), dtype=bool)
-    t0 = time.time()
-    for r in range(fl.rounds):
-        params, sched_state, selected, loss = round_fn(
-            params, sched_state, jax.random.fold_in(k_run, r)
-        )
-        sel_hist[r] = np.asarray(selected)
-        if (r + 1) % fl.eval_every == 0 or r == fl.rounds - 1:
-            ev = task.eval_fn(params)
-            history["round"].append(r + 1)
-            history["accuracy"].append(float(ev["accuracy"]))
-            history["eval_loss"].append(float(ev["loss"]))
-            history["train_loss"].append(float(loss))
-            if progress:
-                print(
-                    f"  [{policy.name}] round {r + 1:4d} acc={float(ev['accuracy']):.4f} "
-                    f"loss={float(ev['loss']):.4f} ({time.time() - t0:.1f}s)",
-                    flush=True,
-                )
-    stats = empirical_load_stats(sel_hist)
+    cfg = run_config_from_legacy(fl)
+    res = run_engine(SyncEngine(task, cfg, policy=policy), progress=progress)
     return {
-        "history": history,
-        "selection": sel_hist,
-        "load_stats": stats,
-        "params": params,
-        "wall_time_s": time.time() - t0,
+        "history": res.history(),
+        "selection": res.selection,
+        "load_stats": res.load_stats,
+        "params": res.params,
+        "wall_time_s": res.wall_time_s,
     }
 
 

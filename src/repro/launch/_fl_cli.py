@@ -1,0 +1,82 @@
+"""Shared CLI plumbing for the federated training drivers.
+
+``fl_train`` (sync) and ``fl_async`` differ only in mode-specific flags
+and reporting; the argparse skeleton, task construction, RunConfig
+assembly, and JSON output all live here so the two drivers cannot drift.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict, Optional
+
+from repro.engine import RunConfig, dump_json, policy_names
+from repro.fl.task import FLTask
+
+
+def add_common_args(ap: argparse.ArgumentParser, defaults: Dict[str, Any]) -> None:
+    """Flags shared by both drivers; ``defaults`` carries the per-driver
+    defaults (sync trains longer per round, async favors frequent small
+    local updates)."""
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "cifar10", "cifar100"])
+    ap.add_argument("--arch", default=None,
+                    help="use a reduced LLM arch as the FL workload")
+    ap.add_argument("--policy", default="markov", choices=sorted(policy_names()))
+    ap.add_argument("--rounds", type=int, default=defaults["rounds"],
+                    help=defaults.get("rounds_help", "training rounds"))
+    ap.add_argument("--clients", type=int, default=defaults["clients"])
+    ap.add_argument("--k", type=int, default=15)
+    ap.add_argument("--m", type=int, default=10)
+    ap.add_argument("--aggregator", default=None,
+                    help="aggregation rule (default: fedavg sync / fedbuff async)")
+    ap.add_argument("--local-epochs", type=int, default=defaults["local_epochs"])
+    ap.add_argument("--batch-size", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=defaults["lr"])
+    ap.add_argument("--noniid", action="store_true", help="Dirichlet(0.6) label skew")
+    ap.add_argument("--data-scale", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+
+
+def build_task(args: argparse.Namespace) -> FLTask:
+    """The federated workload: the paper's CNN or a reduced LLM arch."""
+    from repro.fl import make_cnn_task, make_lm_task
+
+    if args.arch:
+        from repro.configs import get_arch
+
+        cfg = get_arch(args.arch).reduced()
+        return make_lm_task(cfg, args.clients, seq_len=64, docs_per_client=8,
+                            seed=args.seed)
+    from repro.configs.paper_cnn import CNN_CONFIGS
+    from repro.data.synthetic import load_dataset
+
+    train, test = load_dataset(args.dataset, seed=args.seed, scale=args.data_scale)
+    cnn = CNN_CONFIGS[f"paper-cnn-{args.dataset}"]
+    return make_cnn_task(
+        cnn, train, test, args.clients,
+        noniid_alpha=0.6 if args.noniid else None, seed=args.seed,
+    )
+
+
+def build_run_config(args: argparse.Namespace, mode: str, eval_div: int,
+                     **extra) -> RunConfig:
+    return RunConfig(
+        mode=mode,
+        n_clients=args.clients, k=args.k, m=args.m, policy=args.policy,
+        aggregator=args.aggregator,
+        rounds=args.rounds, local_epochs=args.local_epochs,
+        batch_size=args.batch_size, lr0=args.lr, seed=args.seed,
+        eval_every=max(args.rounds // eval_div, 1),
+        **extra,
+    )
+
+
+def write_result(path: Optional[str], result, args: argparse.Namespace) -> None:
+    """One strict-JSON results dump for every driver (NaN-safe)."""
+    if not path:
+        return
+    payload = result.to_jsonable()
+    payload["cli_args"] = vars(args)
+    dump_json(path, payload)
+    print("wrote", path)

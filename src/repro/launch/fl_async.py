@@ -1,94 +1,78 @@
 """Asynchronous federated training driver — the paper's experiment under
 wall-clock heterogeneity (stragglers, dropouts, availability windows).
 
-Mirrors ``fl_train`` but runs the event-driven simulator: clients that
-become available consult their Markov chain (admission control), train on
-the model version they pulled, and the server aggregates a staleness-
-discounted buffer of k updates per step. Load-metric statistics are
-reported in *simulated seconds* alongside the round-indexed theory.
+Mirrors ``fl_train`` but runs the event-driven simulator through the same
+unified engine API: clients that become available consult their selection
+policy (admission control), train on the model version they pulled, and
+the server aggregates a buffer of updates per step through the configured
+aggregator (staleness-discounted ``fedbuff`` by default, ``fedprox`` for
+proximal damping). Load-metric statistics are reported in *simulated
+seconds* alongside the round-indexed theory.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.fl_async --policy markov \
       --rounds 40 --clients 200
   PYTHONPATH=src python -m repro.launch.fl_async --latency-profile mobile \
       --policy markov --buffer-size 10 --staleness-weight 0.5
+  PYTHONPATH=src python -m repro.launch.fl_async --policy markov_hetero \
+      --latency-profile mobile --rounds 30   # per-client-rate admission
   PYTHONPATH=src python -m repro.launch.fl_async --latency-profile uniform \
       --policy random --rounds 30     # degenerate: reduces to sync FedAvg
 """
 from __future__ import annotations
 
 import argparse
-import json
-import math
 
-from repro.configs.paper_cnn import CNN_CONFIGS
 from repro.core import load_metric
-from repro.core.load_metric import empirical_load_stats
-from repro.data.synthetic import load_dataset
-from repro.fl import FLConfig, make_cnn_task, make_lm_task
-from repro.sim import PROFILES, AsyncConfig, run_async_training
+from repro.engine import AsyncEngine, run_engine
+from repro.launch._fl_cli import (
+    add_common_args,
+    build_run_config,
+    build_task,
+    write_result,
+)
+from repro.sim import PROFILES
+
+# async default: frequent small local updates (FedBuff-style) — with
+# per-client shards this small, 5 epochs at lr 0.1 diverges (sync too)
+DEFAULTS = {
+    "rounds": 40, "clients": 200, "local_epochs": 2, "lr": 0.05,
+    "rounds_help": "server steps (buffer flushes)",
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="mnist", choices=["mnist", "cifar10", "cifar100"])
-    ap.add_argument("--arch", default=None, help="use a reduced LLM arch as the FL workload")
-    ap.add_argument("--policy", default="markov")
-    ap.add_argument("--rounds", type=int, default=40, help="server steps (buffer flushes)")
-    ap.add_argument("--clients", type=int, default=200)
-    ap.add_argument("--k", type=int, default=15)
-    ap.add_argument("--m", type=int, default=10)
+    add_common_args(ap, DEFAULTS)
     ap.add_argument("--buffer-size", type=int, default=None,
                     help="updates aggregated per server step (default k)")
-    ap.add_argument("--latency-profile", default="lognormal", choices=sorted(PROFILES))
+    ap.add_argument("--latency-profile", default="lognormal",
+                    choices=sorted(PROFILES))
     ap.add_argument("--staleness-weight", type=float, default=0.5,
                     help="polynomial discount exponent a in (1+s)^-a; 0 = constant")
     ap.add_argument("--max-versions", type=int, default=8)
-    # async default: frequent small local updates (FedBuff-style) — with
-    # per-client shards this small, 5 epochs at lr 0.1 diverges (sync too)
-    ap.add_argument("--local-epochs", type=int, default=2)
-    ap.add_argument("--batch-size", type=int, default=50)
-    ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--noniid", action="store_true", help="Dirichlet(0.6) label skew")
-    ap.add_argument("--data-scale", type=float, default=0.25)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    if args.arch:
-        from repro.configs import get_arch
-
-        cfg = get_arch(args.arch).reduced()
-        task = make_lm_task(cfg, args.clients, seq_len=64, docs_per_client=8, seed=args.seed)
-    else:
-        train, test = load_dataset(args.dataset, seed=args.seed, scale=args.data_scale)
-        cnn = CNN_CONFIGS[f"paper-cnn-{args.dataset}"]
-        task = make_cnn_task(
-            cnn, train, test, args.clients,
-            noniid_alpha=0.6 if args.noniid else None, seed=args.seed,
-        )
-
-    fl = FLConfig(
-        n_clients=args.clients, k=args.k, m=args.m, policy=args.policy,
-        rounds=args.rounds, local_epochs=args.local_epochs,
-        batch_size=args.batch_size, lr0=args.lr, seed=args.seed,
-        eval_every=max(args.rounds // 20, 1),
-    )
-    acfg = AsyncConfig(
+    task = build_task(args)
+    cfg = build_run_config(
+        args, mode="async", eval_div=20,
+        aggregator_kwargs={
+            "staleness_mode": "const" if args.staleness_weight == 0 else "poly",
+            "staleness_exp": args.staleness_weight,
+        } if args.aggregator in (None, "fedbuff", "fedprox") else {},
         buffer_size=args.buffer_size,
-        staleness_mode="const" if args.staleness_weight == 0 else "poly",
-        staleness_exp=args.staleness_weight,
         max_versions=args.max_versions,
         profile=args.latency_profile,
     )
     print(
-        f"async policy={args.policy} profile={args.latency_profile} "
-        f"n={fl.n_clients} k={fl.k} m={fl.m} buffer={acfg.buffer_size or fl.k} "
-        f"steps={fl.rounds} staleness=(1+s)^-{args.staleness_weight}"
+        f"async policy={cfg.policy} profile={args.latency_profile} "
+        f"n={cfg.n_clients} k={cfg.k} m={cfg.m} buffer={cfg.resolved_buffer_size()} "
+        f"steps={cfg.rounds} aggregator={cfg.resolved_aggregator()} "
+        f"staleness=(1+s)^-{args.staleness_weight}"
     )
-    out = run_async_training(task, fl, acfg, progress=True)
+    res = run_engine(AsyncEngine(task, cfg), progress=True)
 
-    ws = out["wall_stats"]
+    ws = res.wall_stats
     print("\n== load metric X (wall clock) ==")
     print(f"simulated time: {ws['sim_time']:.2f}s over {ws['aggregations']} aggregations "
           f"({ws['updates_applied']} client updates)")
@@ -96,39 +80,19 @@ def main() -> None:
           f"(samples {ws['num_samples_wall']})")
     print(f"X_epoch: E[X]={ws['mean_X_epoch']:.3f} Var[X]={ws['var_X_epoch']:.3f} "
           f"(samples {ws['num_samples_epoch']})")
-    print(f"theory (sync rounds): E[X]={fl.n_clients / fl.k:.3f} "
-          f"Var random={load_metric.random_selection_var(fl.n_clients, fl.k):.3f} "
-          f"Var markov*={load_metric.optimal_var(fl.n_clients, fl.k, fl.m):.3f}")
+    print(f"theory (sync rounds): E[X]={cfg.n_clients / cfg.k:.3f} "
+          f"Var random={load_metric.random_selection_var(cfg.n_clients, cfg.k):.3f} "
+          f"Var markov*={load_metric.optimal_var(cfg.n_clients, cfg.k, cfg.m):.3f}")
     print(f"staleness: mean={ws['mean_staleness']:.2f} max={ws['max_staleness']}")
-    if out["selection"] is not None:
-        es = empirical_load_stats(out["selection"])
+    if res.selection is not None:
+        es = res.load_stats
         print(f"dispatch cohorts: mean={es['mean_cohort']:.2f} std={es['std_cohort']:.2f} "
               f"range [{es['min_cohort']}, {es['max_cohort']}]")
-    h = out["history"]
-    if h["accuracy"]:
-        print(f"final: acc={h['accuracy'][-1]:.4f} eval_loss={h['eval_loss'][-1]:.4f} "
-              f"(v{h['version'][-1]} @ t={h['clock'][-1]:.2f}s)")
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(
-                _nan_to_null(
-                    {"history": h, "wall_stats": ws, "config": vars(args),
-                     "wall_time_s": out["wall_time_s"]}
-                ),
-                f, indent=1, allow_nan=False,
-            )
-        print("wrote", args.out)
-
-
-def _nan_to_null(x):
-    """Strict-JSON payloads: empty-aggregation steps carry NaN losses."""
-    if isinstance(x, dict):
-        return {k: _nan_to_null(v) for k, v in x.items()}
-    if isinstance(x, list):
-        return [_nan_to_null(v) for v in x]
-    if isinstance(x, float) and not math.isfinite(x):
-        return None
-    return x
+    if res.records:
+        last = res.records[-1]
+        print(f"final: acc={last.accuracy:.4f} eval_loss={last.eval_loss:.4f} "
+              f"(v{last.version} @ t={last.clock:.2f}s)")
+    write_result(args.out, res, args)
 
 
 if __name__ == "__main__":

@@ -3,90 +3,61 @@
 Runs FedAvg on a synthetic MNIST/CIFAR-like dataset (or a reduced LLM
 workload) under a chosen selection policy and reports accuracy-vs-round
 plus the load-metric statistics (Var[X], cohort sizes) against theory.
+Driven through the unified engine API: any registered policy or
+aggregator name works here without touching the round loop.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.fl_train --dataset mnist \
       --policy markov --rounds 60
   PYTHONPATH=src python -m repro.launch.fl_train --dataset mnist --noniid \
       --policy random --rounds 60
+  PYTHONPATH=src python -m repro.launch.fl_train --policy markov_hetero \
+      --rounds 40                        # per-client-rate Markov chains
   PYTHONPATH=src python -m repro.launch.fl_train --arch tinyllama-1.1b \
       --policy markov --rounds 20        # reduced-LLM federated workload
 """
 from __future__ import annotations
 
 import argparse
-import json
 
-import numpy as np
-
-from repro.configs.paper_cnn import CNN_CONFIGS
 from repro.core import load_metric
-from repro.data.synthetic import load_dataset
-from repro.fl import FLConfig, make_cnn_task, make_lm_task, run_training
+from repro.engine import SyncEngine, run_engine
 from repro.fl.rounds import rounds_to_target
+from repro.launch._fl_cli import (
+    add_common_args,
+    build_run_config,
+    build_task,
+    write_result,
+)
+
+DEFAULTS = {"rounds": 60, "clients": 100, "local_epochs": 5, "lr": 0.1}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="mnist", choices=["mnist", "cifar10", "cifar100"])
-    ap.add_argument("--arch", default=None, help="use a reduced LLM arch as the FL workload")
-    ap.add_argument("--policy", default="markov")
-    ap.add_argument("--rounds", type=int, default=60)
-    ap.add_argument("--clients", type=int, default=100)
-    ap.add_argument("--k", type=int, default=15)
-    ap.add_argument("--m", type=int, default=10)
-    ap.add_argument("--local-epochs", type=int, default=5)
-    ap.add_argument("--batch-size", type=int, default=50)
-    ap.add_argument("--lr", type=float, default=0.1)
-    ap.add_argument("--noniid", action="store_true", help="Dirichlet(0.6) label skew")
-    ap.add_argument("--data-scale", type=float, default=0.25)
+    add_common_args(ap, DEFAULTS)
     ap.add_argument("--target-acc", type=float, default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    if args.arch:
-        from repro.configs import get_arch
+    task = build_task(args)
+    cfg = build_run_config(args, mode="sync", eval_div=30)
+    print(f"policy={cfg.policy} n={cfg.n_clients} k={cfg.k} m={cfg.m} "
+          f"rounds={cfg.rounds} aggregator={cfg.resolved_aggregator()}")
+    res = run_engine(SyncEngine(task, cfg), progress=True)
 
-        cfg = get_arch(args.arch).reduced()
-        task = make_lm_task(cfg, args.clients, seq_len=64, docs_per_client=8, seed=args.seed)
-    else:
-        train, test = load_dataset(args.dataset, seed=args.seed, scale=args.data_scale)
-        cnn = CNN_CONFIGS[f"paper-cnn-{args.dataset}"]
-        task = make_cnn_task(
-            cnn, train, test, args.clients,
-            noniid_alpha=0.6 if args.noniid else None, seed=args.seed,
-        )
-
-    fl = FLConfig(
-        n_clients=args.clients, k=args.k, m=args.m, policy=args.policy,
-        rounds=args.rounds, local_epochs=args.local_epochs,
-        batch_size=args.batch_size, lr0=args.lr, seed=args.seed,
-        eval_every=max(args.rounds // 30, 1),
-    )
-    print(f"policy={args.policy} n={fl.n_clients} k={fl.k} m={fl.m} rounds={fl.rounds}")
-    out = run_training(task, fl, progress=True)
-
-    stats = out["load_stats"]
+    stats = res.load_stats
     print("\n== load metric X ==")
     print(f"empirical: E[X]={stats['mean_X']:.3f} Var[X]={stats['var_X']:.3f} "
           f"(samples {stats['num_samples']})")
-    print(f"theory   : E[X]={fl.n_clients / fl.k:.3f} "
-          f"Var random={load_metric.random_selection_var(fl.n_clients, fl.k):.3f} "
-          f"Var markov*={load_metric.optimal_var(fl.n_clients, fl.k, fl.m):.3f}")
+    print(f"theory   : E[X]={cfg.n_clients / cfg.k:.3f} "
+          f"Var random={load_metric.random_selection_var(cfg.n_clients, cfg.k):.3f} "
+          f"Var markov*={load_metric.optimal_var(cfg.n_clients, cfg.k, cfg.m):.3f}")
     print(f"cohort   : mean={stats['mean_cohort']:.2f} std={stats['std_cohort']:.2f} "
           f"range [{stats['min_cohort']}, {stats['max_cohort']}]")
     if args.target_acc:
-        r = rounds_to_target(out["history"], args.target_acc)
+        r = rounds_to_target(res.history(), args.target_acc)
         print(f"rounds to {args.target_acc:.0%}: {r}")
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(
-                {"history": out["history"], "load_stats": stats,
-                 "config": vars(args), "wall_time_s": out["wall_time_s"]},
-                f, indent=1,
-            )
-        print("wrote", args.out)
+    write_result(args.out, res, args)
 
 
 if __name__ == "__main__":

@@ -1,48 +1,32 @@
-"""FedBuff-style buffered asynchronous training over the event engine.
+"""Back-compat wrappers over the unified engine (``repro.engine``).
 
-One jit'd server step = admission control (idle+available clients consult
-their selection policy — the Markov chain decides *locally* whether to
-pull the model, preserving the paper's zero-coordination property) ->
-dispatch with sampled wall-clock latencies -> pop the next ``buffer_size``
-completions (event_topk kernel at fleet scale) -> vmapped local training
-from each client's *dispatch-time* model version (a ring buffer of the
-last ``max_versions`` global models) -> staleness-weighted delta
-aggregation -> clock/version advance.
+The FedBuff-style buffered asynchronous loop that used to live here is
+now ``AsyncEngine`` in ``repro.engine.async_engine``, driven through the
+one ``RunConfig``/``RunResult`` contract shared with the sync engine, with
+the staleness-discounted delta aggregation factored out into the
+``fedbuff`` aggregator. ``run_async_training`` keeps the legacy signature
+and returns the legacy history dict, reproducing the pre-refactor loop
+bit-for-bit on fixed seeds (pinned by ``tests/test_engine_equivalence.py``).
 
-Staleness s = (server version now) - (version the client trained from);
-updates are discounted by ``(1+s)^-a`` (polynomial, FedBuff/FedAsync
-style) or applied uniformly (``const``). With the degenerate ``uniform``
-latency profile (zero spread, always available, no dropout) and
-``buffer_size = k`` every dispatch completes inside its own step with
-s = 0, and the loop reproduces the synchronous FedAvg round of
-``fl/rounds.py`` exactly — the equivalence ``tests/test_async_rounds.py``
-pins down.
-
-The load metric is reported on two clocks: X in decision epochs (the
-paper's round-indexed Var[X]) and X in simulated seconds (wall-clock
-inter-update gaps per client), which is where stragglers and availability
-windows actually show up.
+With the degenerate ``uniform`` latency profile (zero spread, always
+available, no dropout) and ``buffer_size = k`` every dispatch completes
+inside its own step with staleness 0, and the loop reproduces the
+synchronous FedAvg round exactly — the equivalence
+``tests/test_async_rounds.py`` pins down.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional, Union
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aoi import age_update, peak_age_accumulate
-from repro.core.selection import Policy, make_policy
-from repro.fl.client import make_local_update
+from repro.core.selection import Policy
+from repro.engine.aggregators import staleness_weight  # noqa: F401  (back-compat)
 from repro.fl.config import FLConfig
 from repro.fl.task import FLTask
-from repro.optim.schedules import exponential_decay
-from repro.sim import events as ev_mod
 from repro.sim import latency as lat_mod
 
 # collect the full (steps, n) selection matrix only below this cell count
+# (re-exported for back-compat; the engine's run loop owns the cap now)
 HISTORY_CELL_CAP = 4_000_000
 
 
@@ -61,182 +45,20 @@ class AsyncConfig:
         return lat_mod.get_profile(self.profile)
 
 
-def staleness_weight(
-    s: jnp.ndarray, mode: str = "poly", exp: float = 0.5
-) -> jnp.ndarray:
-    """Aggregation discount for an update of staleness ``s`` versions."""
-    s = jnp.maximum(s.astype(jnp.float32), 0.0)
-    if mode == "const":
-        return jnp.ones_like(s)
-    if mode == "poly":
-        return (1.0 + s) ** (-exp)
-    raise ValueError(f"unknown staleness mode {mode!r}")
-
-
-def _init_stats() -> Dict[str, jnp.ndarray]:
-    z = jnp.zeros((), jnp.float32)
-    return {
-        "wall_sx": z, "wall_sx2": z, "wall_cnt": z,  # X in simulated seconds
-        "ep_sx": z, "ep_sx2": z, "ep_cnt": z,  # X in decision epochs
-        "stale_sum": z, "stale_cnt": z,
-        "stale_max": jnp.zeros((), jnp.int32),
-        "updates": z,  # successful updates aggregated
-        "aggs": z,  # server versions produced
-    }
-
-
 def make_async_step(
     task: FLTask, fl: FLConfig, acfg: AsyncConfig, policy: Policy
 ):
-    """Builds (init_state, step). ``step(state, key) -> (state, aux)``."""
-    n = fl.n_clients
-    B = acfg.buffer_size or fl.k
-    H = acfg.max_versions
-    profile = acfg.resolved_profile()
-    local_update = make_local_update(
-        task.loss_fn, fl.local_epochs, fl.batch_size, task.examples_per_client
+    """Builds (init_state, step) for one async server step (legacy helper)."""
+    from repro.engine.async_engine import _make_async_step
+    from repro.engine.config import run_config_from_legacy
+    from repro.engine.registry import make_aggregator
+
+    cfg = run_config_from_legacy(fl, acfg)
+    agg = make_aggregator(
+        "fedbuff", staleness_mode=acfg.staleness_mode,
+        staleness_exp=acfg.staleness_exp,
     )
-    lr_fn = exponential_decay(fl.lr0, fl.lr_decay)
-
-    def init_state(params, sched_state, key):
-        return {
-            "params": params,
-            # ring buffer of the last H global models; slot v % H = version v
-            "hist": jax.tree.map(
-                lambda p: jnp.broadcast_to(p[None], (H,) + p.shape), params
-            ),
-            "sched": sched_state,
-            "ev": ev_mod.init_event_state(n),
-            "speed": lat_mod.client_speed(key, n, profile),
-            "clock": jnp.zeros((), jnp.float32),
-            "version": jnp.zeros((), jnp.int32),
-            "stats": _init_stats(),
-        }
-
-    @jax.jit
-    def step(state, key):
-        ev, sched, stats = state["ev"], state["sched"], state["stats"]
-        clock, version = state["clock"], state["version"]
-        # same key split as the sync round so the degenerate case is
-        # bit-for-bit comparable; latency/dropout/gap keys are fresh folds
-        k_sel, k_local = jax.random.split(key)
-        k_lat = jax.random.fold_in(k_sel, 101)
-        k_drop = jax.random.fold_in(k_sel, 102)
-        k_gap = jax.random.fold_in(k_sel, 103)
-
-        # --- admission control: idle+available clients consult the policy
-        prev_ages = sched["ages"]
-        idle = jnp.isinf(ev["t_done"])
-        available = ev["next_avail"] <= clock
-        want, sched = policy.step(sched, k_sel)
-        send = want & idle & available
-        # only actual dispatches reset the AoI clock; everyone else ages
-        sched = {**sched, "ages": age_update(prev_ages, send)}
-        ep_sx, ep_sx2, ep_cnt = peak_age_accumulate(
-            prev_ages, send, stats["ep_sx"], stats["ep_sx2"], stats["ep_cnt"]
-        )
-
-        # --- dispatch: sample wall-clock latencies, mark in flight
-        latency = lat_mod.sample_latency(k_lat, profile, state["speed"])
-        dropped = lat_mod.sample_dropout(k_drop, profile, n)
-        ev = ev_mod.schedule_completions(ev, send, clock, latency, version, dropped)
-
-        # --- pop the next B completions, advance the simulated clock
-        t_ev, idx, valid, ev = ev_mod.pop_events(ev, B, use_kernel=acfg.use_kernel)
-        new_clock = jnp.maximum(clock, jnp.max(jnp.where(valid, t_ev, -jnp.inf)))
-        # an all-idle fleet inside availability gaps must not freeze the
-        # clock: with nothing in flight to pop, jump to the earliest
-        # window opening so availability can recover next step
-        new_clock = jnp.where(
-            valid.any(), new_clock,
-            jnp.maximum(new_clock, jnp.min(ev["next_avail"])),
-        )
-
-        # --- local training from each client's dispatch-time model
-        disp_ver = ev["disp_ver"][idx]
-        # versions older than the ring are trained from the oldest retained
-        # model; staleness for weighting still uses the true dispatch version
-        read_ver = jnp.clip(disp_ver, jnp.maximum(version - (H - 1), 0), version)
-        disp_params = jax.tree.map(lambda h: h[read_ver % H], state["hist"])
-        shards = jax.tree.map(lambda a: a[idx], task.client_data)
-        keys = jax.random.split(k_local, B)
-        lr = lr_fn(jnp.maximum(disp_ver, 0))
-        updated, losses = jax.vmap(local_update, in_axes=(0, 0, 0, 0))(
-            disp_params, shards, keys, lr
-        )
-
-        # --- staleness-weighted buffered aggregation of deltas
-        succ = valid & ~ev["dropped"][idx]
-        staleness = jnp.maximum(version - disp_ver, 0)
-        w = succ.astype(jnp.float32) * staleness_weight(
-            staleness, acfg.staleness_mode, acfg.staleness_exp
-        )
-        wsum = w.sum()
-        has = wsum > 0
-        denom = jnp.maximum(wsum, 1e-9)
-
-        def agg(g, u, d):
-            wshape = (-1,) + (1,) * (g.ndim)
-            delta = (u - d).astype(jnp.float32)
-            upd = g + (jnp.sum(delta * w.reshape(wshape), axis=0) / denom).astype(g.dtype)
-            return jnp.where(has, upd, g)
-
-        params = jax.tree.map(agg, state["params"], updated, disp_params)
-        version = version + has.astype(jnp.int32)
-        hist = jax.tree.map(
-            lambda h, p: h.at[version % H].set(p), state["hist"], params
-        )
-        # NaN, not a fake 0.0 datapoint, when nothing was aggregated
-        mean_loss = jnp.where(has, jnp.sum(losses * w) / denom, jnp.nan)
-
-        # --- completed clients go idle; wall-clock AoI samples
-        # gaps are i.i.d. — draw only the B popped clients' worth
-        gaps = lat_mod.sample_avail_gap(k_gap, profile, B)
-        ev = {
-            **ev,
-            "next_avail": ev["next_avail"]
-            .at[ev_mod.scatter_idx(idx, valid)]
-            .set(new_clock + gaps, mode="drop"),
-        }
-        x_wall = t_ev - ev["last_done"][idx]
-        wall_ok = succ & (ev["last_done"][idx] >= 0.0)
-        wall_okf = wall_ok.astype(jnp.float32)
-        ev = {
-            **ev,
-            "last_done": ev["last_done"]
-            .at[ev_mod.scatter_idx(idx, succ)]
-            .set(t_ev, mode="drop"),
-        }
-
-        stats = {
-            "wall_sx": stats["wall_sx"] + jnp.sum(jnp.where(wall_ok, x_wall, 0.0)),
-            "wall_sx2": stats["wall_sx2"] + jnp.sum(jnp.where(wall_ok, x_wall**2, 0.0)),
-            "wall_cnt": stats["wall_cnt"] + wall_okf.sum(),
-            "ep_sx": ep_sx, "ep_sx2": ep_sx2, "ep_cnt": ep_cnt,
-            "stale_sum": stats["stale_sum"]
-            + jnp.sum(jnp.where(succ, staleness, 0).astype(jnp.float32)),
-            "stale_cnt": stats["stale_cnt"] + succ.astype(jnp.float32).sum(),
-            "stale_max": jnp.maximum(
-                stats["stale_max"], jnp.max(jnp.where(succ, staleness, 0))
-            ),
-            "updates": stats["updates"] + succ.astype(jnp.float32).sum(),
-            "aggs": stats["aggs"] + has.astype(jnp.float32),
-        }
-        state = {
-            **state,
-            "params": params, "hist": hist, "sched": sched, "ev": ev,
-            "clock": new_clock, "version": version, "stats": stats,
-        }
-        aux = {
-            "send": send,
-            "loss": mean_loss,
-            "buffer_fill": valid.astype(jnp.int32).sum(),
-            "clock": new_clock,
-            "version": version,
-        }
-        return state, aux
-
-    return init_state, step
+    return _make_async_step(task, cfg, policy, agg, acfg.resolved_profile())
 
 
 def run_async_training(
@@ -248,71 +70,17 @@ def run_async_training(
 ) -> Dict:
     """Full asynchronous FL run. ``fl.rounds`` counts *server steps* (one
     buffer flush each). Returns history + load stats on both clocks."""
+    from repro.engine.api import run_engine
+    from repro.engine.async_engine import AsyncEngine
+    from repro.engine.config import run_config_from_legacy
+
     acfg = acfg or AsyncConfig()
-    key = jax.random.PRNGKey(fl.seed)
-    k_init, k_policy, k_run = jax.random.split(key, 3)
-    policy = policy or make_policy(fl.policy, fl.n_clients, fl.k, fl.m)
-    params = task.init(k_init)
-    sched = policy.init(k_policy, fl.n_clients)
-    init_state, step = make_async_step(task, fl, acfg, policy)
-    state = init_state(params, sched, jax.random.fold_in(k_run, 2**31))
-
-    steps = fl.rounds
-    keep_hist = steps * fl.n_clients <= HISTORY_CELL_CAP
-    sel_hist = np.zeros((steps, fl.n_clients), dtype=bool) if keep_hist else None
-    history = {
-        "round": [], "clock": [], "version": [], "accuracy": [],
-        "eval_loss": [], "train_loss": [], "buffer_fill": [],
-    }
-    t0 = time.time()
-    for s in range(steps):
-        state, aux = step(state, jax.random.fold_in(k_run, s))
-        if keep_hist:
-            sel_hist[s] = np.asarray(aux["send"])
-        if (s + 1) % fl.eval_every == 0 or s == steps - 1:
-            evm = task.eval_fn(state["params"])
-            history["round"].append(s + 1)
-            history["clock"].append(float(aux["clock"]))
-            history["version"].append(int(aux["version"]))
-            history["accuracy"].append(float(evm["accuracy"]))
-            history["eval_loss"].append(float(evm["loss"]))
-            history["train_loss"].append(float(aux["loss"]))
-            history["buffer_fill"].append(int(aux["buffer_fill"]))
-            if progress:
-                print(
-                    f"  [{policy.name}/{acfg.resolved_profile().name}] "
-                    f"step {s + 1:4d} t={float(aux['clock']):9.2f}s "
-                    f"v={int(aux['version']):4d} "
-                    f"acc={float(evm['accuracy']):.4f} "
-                    f"loss={float(evm['loss']):.4f} "
-                    f"({time.time() - t0:.1f}s)",
-                    flush=True,
-                )
-    st = {k: float(v) for k, v in state["stats"].items()}
-
-    def _mv(sx, sx2, cnt):
-        if cnt <= 0:
-            return float("nan"), float("nan")
-        mean = sx / cnt
-        return mean, max(sx2 / cnt - mean * mean, 0.0)
-
-    mean_w, var_w = _mv(st["wall_sx"], st["wall_sx2"], st["wall_cnt"])
-    mean_e, var_e = _mv(st["ep_sx"], st["ep_sx2"], st["ep_cnt"])
-    wall_stats = {
-        "mean_X_wall": mean_w, "var_X_wall": var_w,
-        "num_samples_wall": int(st["wall_cnt"]),
-        "mean_X_epoch": mean_e, "var_X_epoch": var_e,
-        "num_samples_epoch": int(st["ep_cnt"]),
-        "mean_staleness": st["stale_sum"] / max(st["stale_cnt"], 1.0),
-        "max_staleness": int(st["stale_max"]),
-        "updates_applied": int(st["updates"]),
-        "aggregations": int(st["aggs"]),
-        "sim_time": float(state["clock"]),
-    }
+    cfg = run_config_from_legacy(fl, acfg)
+    res = run_engine(AsyncEngine(task, cfg, policy=policy), progress=progress)
     return {
-        "history": history,
-        "selection": sel_hist,
-        "wall_stats": wall_stats,
-        "params": state["params"],
-        "wall_time_s": time.time() - t0,
+        "history": res.history(),
+        "selection": res.selection,
+        "wall_stats": res.wall_stats,
+        "params": res.params,
+        "wall_time_s": res.wall_time_s,
     }
