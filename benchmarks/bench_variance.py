@@ -10,10 +10,9 @@ import jax
 import numpy as np
 
 from repro.core import (
-    empirical_load_stats,
     load_metric as lm,
     make_policy,
-    simulate,
+    simulate_stats,
 )
 from repro.core.distributed import scheduler_comm_bytes
 
@@ -35,11 +34,12 @@ def run(csv_rows):
     for n, k, m in settings:
         rounds = 4000 if n <= 500 else 1500
         t0 = time.time()
-        h_r = simulate(make_policy("random", n, k), key, n, rounds)
-        h_m = simulate(make_policy("markov", n, k, m), key, n, rounds)
-        h_o = simulate(make_policy("oldest_age", n, k), key, n, rounds)
+        # fused scan + device accumulators: the (rounds, n) history never
+        # exists, so Monte Carlo scales to fleets where it never could
+        s_r = simulate_stats(make_policy("random", n, k), key, n, rounds, k)
+        s_m = simulate_stats(make_policy("markov", n, k, m), key, n, rounds, k)
+        s_o = simulate_stats(make_policy("oldest_age", n, k), key, n, rounds, k)
         dt = time.time() - t0
-        s_r, s_m, s_o = (empirical_load_stats(h) for h in (h_r, h_m, h_o))
         thy_r = lm.random_selection_var(n, k)
         thy_m = lm.optimal_var(n, k, m)
         print(f"{n:5d} {k:4d} {m:4d} | {thy_r:9.3f} {s_r['var_X']:9.3f} | "
@@ -51,8 +51,8 @@ def run(csv_rows):
         )
 
     n, k, m = 100, 15, 10
-    h_m = simulate(make_policy("markov", n, k, m), jax.random.PRNGKey(1), n, 4000)
-    s = empirical_load_stats(h_m)
+    s = simulate_stats(make_policy("markov", n, k, m), jax.random.PRNGKey(1),
+                       n, 4000, k)
     print(f"\ncohort (markov n={n} k={k}): mean={s['mean_cohort']:.2f} "
           f"std={s['std_cohort']:.2f} range=[{s['min_cohort']},{s['max_cohort']}]")
     csv_rows.append(("markov_cohort_std", 0.0, f"{s['std_cohort']:.3f}"))

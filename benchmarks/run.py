@@ -6,11 +6,65 @@ end (and human-readable tables along the way).
   PYTHONPATH=src python -m benchmarks.run --only variance,roofline
   PYTHONPATH=src python -m benchmarks.run --paper-scale  # full Figs 2-4 protocol
   PYTHONPATH=src python -m benchmarks.run --out bench.json   # strict-JSON dump
+  PYTHONPATH=src python -m benchmarks.run --only async \
+      --check benchmarks/baselines/cpu.json              # regression gate
+
+``--check`` compares every timed row against a committed baseline (same
+strict-JSON schema as ``--out``) by name and exits nonzero when a row is
+slower than ``baseline * (1 + rtol)``. Refresh a stale baseline by
+re-running with ``--out`` pointed at the baseline file.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+
+
+def check_against_baseline(csv_rows, baseline_path: str, rtol: float) -> int:
+    """Compare timed rows to a committed baseline; returns the number of
+    regressions (rows slower than baseline * (1 + rtol))."""
+    with open(baseline_path) as f:
+        payload = json.load(f)
+    base = {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+    regressions, faster, missing = [], [], []
+    compared = 0
+    print(f"\n== regression check vs {baseline_path} (rtol={rtol}) ==")
+    for name, us, _ in csv_rows:
+        if us <= 0:  # derived-only rows carry no timing
+            continue
+        if name not in base or base[name] <= 0:
+            missing.append(name)
+            continue
+        compared += 1
+        ratio = us / base[name]
+        flag = ""
+        if ratio > 1.0 + rtol:
+            regressions.append(name)
+            flag = "  <-- REGRESSION"
+        elif ratio < 1.0 / (1.0 + rtol):
+            faster.append(name)
+            flag = "  (faster; consider refreshing the baseline)"
+        print(f"  {name:40s} {us:12.1f}us vs {base[name]:12.1f}us "
+              f"({ratio:5.2f}x){flag}")
+    if missing:
+        print(f"  [not in baseline: {', '.join(missing)}]")
+    if regressions:
+        print(f"FAIL: {len(regressions)} row(s) regressed: "
+              f"{', '.join(regressions)}")
+    elif compared == 0:
+        # a gate that compared nothing must not read as green — either
+        # the wrong --only subset was checked or every row was renamed
+        print("FAIL: no timed row matched the baseline; nothing was "
+              "actually checked (wrong --only subset, or rows renamed "
+              "without refreshing the baseline?)")
+        return 1
+    else:
+        print(f"OK: no regressions across {compared} compared rows"
+              + (f" ({len(faster)} faster than baseline)" if faster else "")
+              + (f"; {len(missing)} not in baseline" if missing else ""))
+    return len(regressions)
 
 
 def main() -> None:
@@ -21,6 +75,15 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--out", default=None,
                     help="write the CSV rows as strict JSON (NaN-safe)")
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="compare rows against a committed baseline "
+                         "(benchmarks/baselines/cpu.json) and exit nonzero "
+                         "on regression")
+    ap.add_argument("--check-rtol", type=float, default=1.0,
+                    help="relative tolerance for --check: a row regresses "
+                         "when slower than baseline * (1 + rtol). The "
+                         "default is deliberately loose — shared CI boxes "
+                         "jitter ~2x; tighten locally for real perf work")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -70,6 +133,9 @@ def main() -> None:
             "total_s": time.time() - t0,
         })
         print("wrote", args.out)
+    if args.check:
+        if check_against_baseline(csv_rows, args.check, args.check_rtol):
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -2,6 +2,7 @@
 from repro.core.aoi import age_update, chain_state  # noqa: F401
 from repro.core.load_metric import (  # noqa: F401
     empirical_load_stats,
+    init_selection_accum,
     markov_moments,
     markov_var,
     optimal_probs,
@@ -10,7 +11,9 @@ from repro.core.load_metric import (  # noqa: F401
     random_selection_mean,
     random_selection_var,
     selection_rate,
+    selection_stats_from_accum,
     steady_state,
+    update_selection_accum,
     theorem1_optimal,
     theorem1_var,
 )
@@ -19,4 +22,5 @@ from repro.core.selection import (  # noqa: F401
     Policy,
     make_policy,
     simulate,
+    simulate_stats,
 )

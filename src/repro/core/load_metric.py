@@ -190,3 +190,120 @@ def empirical_load_stats(history: np.ndarray) -> dict:
         "min_cohort": int(sizes.min()),
         "max_cohort": int(sizes.max()),
     }
+
+
+# ---------------------------------------------------------------------------
+# Device-resident sufficient statistics for the same quantities
+# ---------------------------------------------------------------------------
+#
+# The accumulators replace the materialized (rounds, n) selection matrix in
+# the engines' hot loop: per-client last-selection step plus streaming
+# first/second moments of the inter-selection gaps X and of the cohort
+# sizes — enough to evaluate ``empirical_load_stats`` without ever pulling
+# an (n,)-vector to the host. ``update_selection_accum`` is a pure
+# jit/scan-compatible jnp function; ``selection_stats_from_accum`` runs on
+# host floats at finalize time. Like ``peak_ages_from_history``, a
+# client's first selection only opens its gap window (no X sample).
+#
+# The scalar moments are Kahan-compensated (value + running compensation
+# pairs): x64 is disabled under jax's defaults, and a plain float32 sum
+# loses the billions-of-samples counts/sums a fleet-scale run produces
+# (float32 stops representing consecutive integers at 2^24). The
+# compensated pair keeps the sequential-accumulation error at O(eps)
+# instead of O(steps * eps), at the cost of four scalar flops per moment
+# per step — nothing next to the (n,)-wide work around it.
+
+_MOMENTS = ("gap_sum", "gap_sumsq", "gap_cnt", "size_sum", "size_sumsq")
+
+
+def _kahan_add(sum_, comp, x):
+    y = x - comp
+    t = sum_ + y
+    return t, (t - sum_) - y
+
+
+def init_selection_accum(n: int, expected_cohort: int = 0):
+    """Fresh accumulator pytree for an ``n``-client fleet.
+
+    ``expected_cohort`` (the configured k, when known) centers the
+    cohort-size moments: sizes are accumulated as exact integer
+    deviations from it, so ``size_sumsq`` stays O(steps * Var[size])
+    instead of O(steps * k^2) — at a 100M-client fleet k^2 alone would
+    exhaust float32's mantissa and drown ``std_cohort`` in input
+    rounding, which no summation trick downstream can undo.
+    """
+    import jax.numpy as jnp
+
+    z = jnp.zeros((), jnp.float32)
+    acc = {
+        "last_sel": jnp.full((n,), -1, jnp.int32),  # step of last selection
+        "size_shift": jnp.full((), expected_cohort, jnp.int32),
+        "size_min": jnp.full((), np.iinfo(np.int32).max, jnp.int32),
+        "size_max": jnp.zeros((), jnp.int32),
+        "steps": jnp.zeros((), jnp.int32),  # rounds accumulated
+    }
+    for name in _MOMENTS:  # moments of X / of the centered cohort size
+        acc[name] = z
+        acc["c_" + name] = z  # Kahan compensation
+    return acc
+
+
+def update_selection_accum(acc, selected):
+    """Fold one round's (n,) bool selection vector into the accumulator."""
+    import jax.numpy as jnp
+
+    r = acc["steps"]
+    has_gap = selected & (acc["last_sel"] >= 0)
+    gap = jnp.where(has_gap, r - acc["last_sel"], 0).astype(jnp.float32)
+    size = jnp.sum(selected.astype(jnp.int32))
+    # exact integer deviation from the expected cohort (see init docstring)
+    dev = (size - acc["size_shift"]).astype(jnp.float32)
+    out = {
+        "last_sel": jnp.where(selected, r, acc["last_sel"]),
+        "size_shift": acc["size_shift"],
+        "size_min": jnp.minimum(acc["size_min"], size),
+        "size_max": jnp.maximum(acc["size_max"], size),
+        "steps": r + 1,
+    }
+    increments = {
+        "gap_sum": jnp.sum(gap),
+        "gap_sumsq": jnp.sum(gap * gap),
+        "gap_cnt": jnp.sum(has_gap.astype(jnp.float32)),
+        "size_sum": dev,
+        "size_sumsq": dev * dev,
+    }
+    for name, inc in increments.items():
+        out[name], out["c_" + name] = _kahan_add(
+            acc[name], acc["c_" + name], inc
+        )
+    return out
+
+
+def selection_stats_from_accum(acc) -> dict:
+    """``empirical_load_stats``-shaped dict from a selection accumulator."""
+    # resolve each compensated pair in float64 on the host
+    a = {name: float(acc[name]) - float(acc["c_" + name]) for name in _MOMENTS}
+    steps = int(acc["steps"])
+    cnt = a["gap_cnt"]
+    if cnt > 0:
+        mean_x = a["gap_sum"] / cnt
+        var_x = max(a["gap_sumsq"] / cnt - mean_x * mean_x, 0.0)
+    else:
+        mean_x = var_x = float("nan")
+    if steps > 0:
+        mean_dev = a["size_sum"] / steps
+        mean_c = float(acc["size_shift"]) + mean_dev
+        var_c = max(a["size_sumsq"] / steps - mean_dev * mean_dev, 0.0)
+        min_c, max_c = int(acc["size_min"]), int(acc["size_max"])
+    else:
+        mean_c = var_c = float("nan")
+        min_c = max_c = 0
+    return {
+        "num_samples": int(cnt),
+        "mean_X": mean_x,
+        "var_X": var_x,
+        "mean_cohort": mean_c,
+        "std_cohort": math.sqrt(var_c) if steps > 0 else float("nan"),
+        "min_cohort": min_c,
+        "max_cohort": max_c,
+    }

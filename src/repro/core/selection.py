@@ -264,6 +264,33 @@ def simulate(policy: Policy, key: jax.Array, n: int, rounds: int) -> np.ndarray:
     return np.asarray(hist)
 
 
+def simulate_stats(
+    policy: Policy, key: jax.Array, n: int, rounds: int,
+    expected_cohort: int = 0,
+) -> dict:
+    """Load statistics of a ``rounds``-round policy run without ever
+    materializing the (rounds, n) history: the whole run is one scan over
+    the device-resident selection accumulators, and only the O(1)
+    sufficient statistics come back to the host. Same key schedule and
+    same output dict as ``empirical_load_stats(simulate(...))``.
+
+    Pass the policy's target cohort size k as ``expected_cohort`` — it
+    centers the float32 cohort-size moments, which is what keeps
+    ``std_cohort`` meaningful at fleet-scale k (see
+    ``init_selection_accum``)."""
+    state = policy.init(key, n)
+    acc = load_metric.init_selection_accum(n, expected_cohort)
+
+    def body(carry, key):
+        state, acc = carry
+        sel, state = policy.step(state, key)
+        return (state, load_metric.update_selection_accum(acc, sel)), None
+
+    keys = jax.random.split(jax.random.fold_in(key, 1), rounds)
+    (_, acc), _ = jax.lax.scan(body, (state, acc), keys)
+    return load_metric.selection_stats_from_accum(acc)
+
+
 # ---------------------------------------------------------------------------
 # Registry wiring: every policy is a named (n, k, m, **kw) -> Policy factory.
 # Imported at the bottom, after all public defs, so a partially initialized

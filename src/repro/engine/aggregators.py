@@ -9,12 +9,15 @@ async engines share one aggregation seam instead of hardwiring their own:
     acc   = agg.accumulate(acc, updates, bases, w)
     new_g = agg.finalize(global_params, acc)
 
-``updates`` / ``bases`` are pytrees with a stacked cohort axis: ``bases``
-is the params each cohort member trained *from* (the broadcast global in
-the sync engine, the dispatch-time ring-buffer version in the async one),
-which is what lets delta-based aggregators express staleness correctly.
-All functions are jit-compatible and safe to call with an all-zero weight
-vector (an empty buffer leaves the global params untouched).
+``updates`` is a pytree with a stacked cohort axis; ``bases`` is the
+params each cohort member trained *from* (the dispatch-time ring-buffer
+version in the async engine), which is what lets delta-based aggregators
+express staleness correctly. ``bases`` may also be the *unstacked* global
+tree — the sync engine passes the global params directly and the cohort
+axis broadcasts lazily inside ``accumulate`` (``updates - bases``), so no
+``(width, ...)`` copies are ever materialized. All functions are
+jit-compatible and safe to call with an all-zero weight vector (an empty
+buffer leaves the global params untouched).
 
 Built-ins:
   * ``fedavg``  — weighted mean of the updated params (the paper's FedAvg

@@ -1,10 +1,22 @@
 """The ``Engine`` protocol and the one run loop both engines share.
 
-An engine is anything with ``init/step/finalize`` (plus the small
-``eval_params/record/progress_line`` hooks the loop uses); ``run_engine``
-drives it for ``cfg.rounds`` steps, collects the selection history and
-eval records on the configured cadence, and returns a typed ``RunResult``
-— identical schema for sync and async.
+An engine is anything with ``init/step/run_chunk/finalize`` (plus the
+small ``eval_params/record/progress_line`` hooks the loop uses);
+``run_engine`` drives it for ``cfg.rounds`` steps in jitted, donated
+``lax.scan`` chunks of ``cfg.resolved_steps_per_chunk()`` steps per host
+dispatch, collects the selection history (when configured) and eval
+records on the configured cadence, and returns a typed ``RunResult`` —
+identical schema for sync and async.
+
+The hot loop performs **one host transfer per chunk**: per-step aux
+scalars (and, when history is kept, the chunk's stacked selection rows)
+come back as one device pytree. Load statistics never require the
+materialized history — both engines fold device-resident sufficient
+statistics (``core.load_metric``) inside the scan body, so Var[X] is
+available even for fleet-scale runs where the ``(rounds, n)`` matrix
+could never be stored. Chunked execution is bit-for-bit identical to
+per-step execution (``tests/test_engine_chunked.py``), and chunks never
+straddle an eval step, so records land on exactly the legacy cadence.
 
     cfg = RunConfig(mode="async", policy="markov", aggregator="fedbuff")
     result = run_engine(make_engine(task, cfg), progress=True)
@@ -14,9 +26,10 @@ from __future__ import annotations
 import time
 from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
 
+import jax
 import numpy as np
 
-from repro.engine.config import RoundRecord, RunConfig, RunResult
+from repro.engine.config import RoundRecord, RunConfig, RunResult, chunk_plan
 
 # collect the full (steps, n) selection matrix only below this cell count
 HISTORY_CELL_CAP = 4_000_000
@@ -32,6 +45,10 @@ class Engine(Protocol):
     def init(self) -> Dict: ...
 
     def step(self, state: Dict, r: int) -> Tuple[Dict, Dict]: ...
+
+    def run_chunk(
+        self, state: Dict, r0: int, length: int, with_history: bool
+    ) -> Tuple[Dict, Dict]: ...
 
     def eval_params(self, state: Dict): ...
 
@@ -53,27 +70,43 @@ def make_engine(task, cfg: RunConfig, policy=None, aggregator=None) -> Engine:
     return AsyncEngine(task, cfg, policy=policy, aggregator=aggregator)
 
 
+def keep_history(cfg: RunConfig) -> bool:
+    """Whether a run materializes the (rounds, n) selection matrix.
+
+    ``cfg.collect_history`` wins when set; the legacy heuristic otherwise
+    (sync runs always kept it, async fleets cap at ``HISTORY_CELL_CAP``
+    cells). Load statistics no longer depend on it — the device
+    accumulators cover runs of any size.
+    """
+    if cfg.collect_history is not None:
+        return cfg.collect_history
+    return cfg.mode == "sync" or cfg.rounds * cfg.n_clients <= HISTORY_CELL_CAP
+
+
 def run_engine(engine: Engine, progress: bool = False) -> RunResult:
     """Drive an engine for ``cfg.rounds`` steps and package the result."""
+    from repro.engine.chunk import dealias_pytree
+
     cfg = engine.cfg
     steps = cfg.rounds
-    state = engine.init()
-    # sync runs always keep the selection matrix (load_stats depend on it,
-    # matching the pre-engine loop); async fleets can be orders of
-    # magnitude larger, so they cap as the old async loop did
-    keep_hist = cfg.mode == "sync" or steps * cfg.n_clients <= HISTORY_CELL_CAP
+    state = dealias_pytree(engine.init())
+    keep_hist = keep_history(cfg)
     sel_hist: Optional[np.ndarray] = (
         np.zeros((steps, cfg.n_clients), dtype=bool) if keep_hist else None
     )
     records = []
     t0 = time.time()
-    for r in range(steps):
-        state, aux = engine.step(state, r)
+    for r0, length, do_eval in chunk_plan(
+        steps, cfg.eval_every, cfg.resolved_steps_per_chunk()
+    ):
+        state, aux = engine.run_chunk(state, r0, length, keep_hist)
+        aux = jax.device_get(aux)  # the chunk's one device -> host transfer
         if keep_hist:
-            sel_hist[r] = np.asarray(aux["send"])
-        if (r + 1) % cfg.eval_every == 0 or r == steps - 1:
+            sel_hist[r0:r0 + length] = aux.pop("send")
+        if do_eval:
+            r = r0 + length - 1
             ev = engine.task.eval_fn(engine.eval_params(state))
-            rec = engine.record(r, aux, ev)
+            rec = engine.record(r, {k: v[-1] for k, v in aux.items()}, ev)
             records.append(rec)
             if progress:
                 print(engine.progress_line(rec, time.time() - t0), flush=True)

@@ -32,9 +32,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aoi import age_update, peak_age_accumulate
-from repro.core.load_metric import empirical_load_stats
+from repro.core.load_metric import (
+    empirical_load_stats,
+    init_selection_accum,
+    selection_stats_from_accum,
+    update_selection_accum,
+)
 from repro.core.selection import Policy
 from repro.engine.aggregators import Aggregator
+from repro.engine.chunk import ChunkRunner, run_key
 from repro.engine.config import RoundRecord, RunConfig, RunResult
 from repro.engine.registry import make_aggregator, make_policy
 from repro.fl.client import make_local_update
@@ -84,26 +90,36 @@ class AsyncEngine:
             cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
         )
         self.profile = _resolved_profile(cfg.profile)
-        self._init_state, self._step_fn = _make_async_step(
+        self._init_state, self._step_fn, core = _make_async_step(
             task, cfg, self.policy, self.aggregator, self.profile
+        )
+        self._chunk = ChunkRunner(
+            core, aux_keys=("loss", "clock", "version", "buffer_fill")
         )
 
     def init(self) -> Dict:
         cfg = self.cfg
-        key = jax.random.PRNGKey(cfg.seed)
+        key = run_key(cfg.seed, cfg.rng_impl)
         k_init, k_policy, k_run = jax.random.split(key, 3)
         params = self.task.init(k_init)
         sched = self.policy.init(k_policy, cfg.n_clients)
         state = self._init_state(params, sched, jax.random.fold_in(k_run, 2**31))
         state["k_run"] = k_run
+        state["load_acc"] = init_selection_accum(cfg.n_clients, cfg.k)
         return state
 
     def step(self, state: Dict, r: int):
         k_run = state["k_run"]
-        jstate = {k: v for k, v in state.items() if k != "k_run"}
+        jstate = {k: v for k, v in state.items() if k not in ("k_run", "load_acc")}
         jstate, aux = self._step_fn(jstate, jax.random.fold_in(k_run, r))
         jstate["k_run"] = k_run
+        # keep per-step driving consistent with run_chunk: finalize reads
+        # these accumulators whenever history is off
+        jstate["load_acc"] = update_selection_accum(state["load_acc"], aux["send"])
         return jstate, aux
+
+    def run_chunk(self, state: Dict, r0: int, length: int, with_history: bool):
+        return self._chunk(state, r0, length, with_history)
 
     def eval_params(self, state: Dict):
         return state["params"]
@@ -148,11 +164,15 @@ class AsyncEngine:
             "aggregations": int(st["aggs"]),
             "sim_time": float(state["clock"]),
         }
+        if sel_hist is not None:
+            load_stats = empirical_load_stats(sel_hist)
+        else:
+            load_stats = selection_stats_from_accum(state["load_acc"])
         return RunResult(
             config=self.cfg,
             records=records,
             selection=sel_hist,
-            load_stats=empirical_load_stats(sel_hist) if sel_hist is not None else {},
+            load_stats=load_stats,
             wall_stats=wall_stats,
             params=state["params"],
             wall_time_s=wall_time_s,
@@ -163,7 +183,10 @@ def _make_async_step(
     task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
     profile: lat_mod.LatencyProfile,
 ):
-    """Builds (init_state, step). ``step(state, key) -> (state, aux)``."""
+    """Builds (init_state, jitted step, pure step core).
+
+    ``step(state, key) -> (state, aux)``; the un-jitted core is what the
+    chunked scan body folds over."""
     n = cfg.n_clients
     B = cfg.resolved_buffer_size()
     H = cfg.max_versions
@@ -187,7 +210,6 @@ def _make_async_step(
             "stats": _init_stats(),
         }
 
-    @jax.jit
     def step(state, key):
         ev, sched, stats = state["ev"], state["sched"], state["stats"]
         clock, version = state["clock"], state["version"]
@@ -302,4 +324,4 @@ def _make_async_step(
         }
         return state, aux
 
-    return init_state, step
+    return init_state, jax.jit(step), step

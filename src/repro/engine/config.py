@@ -20,6 +20,10 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 MODES = ("sync", "async")
+RNG_IMPLS = ("threefry2x32", "rbg", "unsafe_rbg")
+# largest scan chunk the auto heuristic will pick (bounds the stacked
+# per-chunk aux/history buffers at chunk_len * n cells)
+MAX_AUTO_CHUNK = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +45,24 @@ class RunConfig:
     # cohort padding for variable-size policies (markov): vmap width
     max_cohort: Optional[int] = None
     eval_every: int = 1
+
+    # --- hot loop ---
+    # steps advanced per host dispatch (jitted, donated lax.scan chunk).
+    # None -> auto: min(eval_every, MAX_AUTO_CHUNK). Chunked execution is
+    # bit-for-bit identical to per-step execution (pinned by
+    # tests/test_engine_chunked.py); chunks never straddle an eval step.
+    steps_per_chunk: Optional[int] = None
+    # materialize the (rounds, n) selection matrix on the host. None ->
+    # legacy heuristic (sync always; async below the history cell cap).
+    # False drops it: load stats then come from the device-resident
+    # accumulators and the hot loop performs one transfer per chunk.
+    collect_history: Optional[bool] = None
+    # PRNG implementation for the run key. None -> jax.random.PRNGKey
+    # (threefry2x32), bit-compatible with every pre-chunking run. "rbg" /
+    # "unsafe_rbg" are counter-based generators that are substantially
+    # faster at fleet scale; same per-step key-folding schedule, different
+    # random stream.
+    rng_impl: Optional[str] = None
 
     # --- engine ---
     mode: str = "sync"  # sync | async
@@ -67,6 +89,15 @@ class RunConfig:
                 "buffer could not hold even an exact-k selection; raise "
                 "max_cohort (or leave it None for the binomial-tail default)"
             )
+        if self.steps_per_chunk is not None and self.steps_per_chunk < 1:
+            raise ValueError(
+                f"steps_per_chunk must be >= 1, got {self.steps_per_chunk}"
+            )
+        if self.rng_impl is not None and self.rng_impl not in RNG_IMPLS:
+            raise ValueError(
+                f"rng_impl must be one of {RNG_IMPLS} (or None for the "
+                f"default PRNGKey), got {self.rng_impl!r}"
+            )
 
     def cohort_width(self) -> int:
         """Padded cohort buffer width for variable-size policies."""
@@ -82,8 +113,33 @@ class RunConfig:
     def resolved_buffer_size(self) -> int:
         return self.buffer_size or self.k
 
+    def resolved_steps_per_chunk(self) -> int:
+        if self.steps_per_chunk is not None:
+            return self.steps_per_chunk
+        return max(1, min(self.eval_every, MAX_AUTO_CHUNK))
+
     def profile_name(self) -> str:
         return self.profile if isinstance(self.profile, str) else self.profile.name
+
+
+def chunk_plan(rounds: int, eval_every: int, steps_per_chunk: int):
+    """Split ``rounds`` steps into scan chunks of at most ``steps_per_chunk``
+    that never straddle an eval step, as ``(start, length, do_eval)``.
+
+    Eval steps are exactly the pre-chunking cadence — every step ``r`` with
+    ``(r + 1) % eval_every == 0`` plus the final step — so a chunked run
+    evaluates (and records) at identical rounds to a per-step run. At most
+    three distinct chunk lengths occur (full chunks, the eval-boundary
+    remainder, and the final-rounds remainder), bounding jit recompilation.
+    """
+    plan = []
+    r = 0
+    while r < rounds:
+        next_eval = min((r // eval_every + 1) * eval_every, rounds)
+        end = min(r + steps_per_chunk, next_eval)
+        plan.append((r, end - r, end == next_eval))
+        r = end
+    return plan
 
 
 def default_cohort_width(n_clients: int, k: int) -> int:

@@ -1,12 +1,21 @@
 """The synchronous FedAvg engine.
 
-One jit'd step = policy step -> cohort gather -> vmapped local training ->
+One step = policy step -> cohort gather -> vmapped local training ->
 aggregator ``weigh/init/accumulate/finalize`` -> age update. This is the
 round loop of ``fl/rounds.py`` re-expressed against the ``Engine``
-protocol (`init/step/finalize`) with the aggregation seam opened up: the
-default ``fedavg`` aggregator reproduces the pre-refactor weighted cohort
-mean bit-for-bit (pinned by ``tests/test_engine_equivalence.py``), while
-delta-based aggregators (``fedprox``) drop in without touching this file.
+protocol (`init/step/run_chunk/finalize`) with the aggregation seam
+opened up: the default ``fedavg`` aggregator reproduces the pre-refactor
+weighted cohort mean bit-for-bit (pinned by
+``tests/test_engine_equivalence.py``), while delta-based aggregators
+(``fedprox``) drop in without touching this file.
+
+The hot loop runs through ``ChunkRunner``: ``steps_per_chunk`` rounds per
+host dispatch via a donated ``lax.scan``, with the selection-gap load
+accumulators updated on device (``tests/test_engine_chunked.py`` pins
+chunked == per-step bit-for-bit). Global params are *not* materialized
+``width`` times per round: the cohort vmap broadcasts them lazily
+(``in_axes=(None, ...)``) and aggregators receive the unstacked global
+tree as ``bases``.
 """
 from __future__ import annotations
 
@@ -14,15 +23,20 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.load_metric import empirical_load_stats
+from repro.core.load_metric import (
+    empirical_load_stats,
+    init_selection_accum,
+    selection_stats_from_accum,
+    update_selection_accum,
+)
 from repro.core.selection import Policy
 from repro.engine.aggregators import Aggregator
+from repro.engine.chunk import ChunkRunner, run_key
 from repro.engine.config import RoundRecord, RunConfig, RunResult
 from repro.engine.registry import make_aggregator, make_policy
 from repro.fl.client import make_local_update
-from repro.fl.server import broadcast_to_cohort, cohort_indices
+from repro.fl.server import cohort_indices
 from repro.fl.task import FLTask
 from repro.optim.schedules import exponential_decay
 
@@ -48,16 +62,24 @@ class SyncEngine:
         self.aggregator = aggregator or make_aggregator(
             cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
         )
-        self._round_fn = _make_round_fn(task, cfg, self.policy, self.aggregator)
+        core = _make_round_core(task, cfg, self.policy, self.aggregator)
+        self._round_fn = jax.jit(core)
+
+        def scan_step(state, key):
+            params, sched, selected, loss = core(state["params"], state["sched"], key)
+            return {"params": params, "sched": sched}, {"send": selected, "loss": loss}
+
+        self._chunk = ChunkRunner(scan_step, aux_keys=("loss",))
 
     def init(self) -> Dict:
         cfg = self.cfg
-        key = jax.random.PRNGKey(cfg.seed)
+        key = run_key(cfg.seed, cfg.rng_impl)
         k_init, k_policy, k_run = jax.random.split(key, 3)
         return {
             "params": self.task.init(k_init),
             "sched": self.policy.init(k_policy, cfg.n_clients),
             "k_run": k_run,
+            "load_acc": init_selection_accum(cfg.n_clients, cfg.k),
         }
 
     def step(self, state: Dict, r: int):
@@ -65,8 +87,16 @@ class SyncEngine:
             state["params"], state["sched"],
             jax.random.fold_in(state["k_run"], r),
         )
-        state = {**state, "params": params, "sched": sched}
+        state = {
+            **state, "params": params, "sched": sched,
+            # keep per-step driving consistent with run_chunk: finalize
+            # reads these accumulators whenever history is off
+            "load_acc": update_selection_accum(state["load_acc"], selected),
+        }
         return state, {"send": selected, "loss": loss}
+
+    def run_chunk(self, state: Dict, r0: int, length: int, with_history: bool):
+        return self._chunk(state, r0, length, with_history)
 
     def eval_params(self, state: Dict):
         return state["params"]
@@ -86,41 +116,58 @@ class SyncEngine:
         )
 
     def finalize(self, state, records, sel_hist, wall_time_s) -> RunResult:
+        if sel_hist is not None:
+            load_stats = empirical_load_stats(sel_hist)
+        else:
+            load_stats = selection_stats_from_accum(state["load_acc"])
         return RunResult(
             config=self.cfg,
             records=records,
             selection=sel_hist,
-            load_stats=empirical_load_stats(sel_hist) if sel_hist is not None else {},
+            load_stats=load_stats,
             wall_stats=None,
             params=state["params"],
             wall_time_s=wall_time_s,
         )
 
 
-def _make_round_fn(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator):
+def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator):
+    """The pure per-round function (no jit): shared by the legacy per-step
+    path and the scan body of the chunked hot loop."""
     width = cfg.cohort_width() if not policy.exact_k else cfg.k
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
     lr_fn = exponential_decay(cfg.lr0, cfg.lr_decay)
 
-    @jax.jit
     def round_fn(params, sched_state, key):
         k_sel, k_local = jax.random.split(key)
         selected, sched_state = policy.step(sched_state, k_sel)
         idx, mask = cohort_indices(selected, width)
         shards = jax.tree.map(lambda a: a[idx], task.client_data)
         lr = lr_fn(sched_state["round"] - 1)
-        cohort_params = broadcast_to_cohort(params, width)
         keys = jax.random.split(k_local, width)
-        updated, losses = jax.vmap(local_update, in_axes=(0, 0, 0, None))(
-            cohort_params, shards, keys, lr
+        # the cohort axis of the global params is a lazy vmap broadcast —
+        # no (width, ...) copies are materialized; aggregators see the
+        # unstacked global tree as ``bases`` and broadcast in their deltas
+        updated, losses = jax.vmap(local_update, in_axes=(None, 0, 0, None))(
+            params, shards, keys, lr
         )
         # sync cohorts are never stale: staleness is identically zero
         w = agg.weigh(mask > 0, jnp.zeros_like(idx))
-        acc = agg.accumulate(agg.init(params), updated, cohort_params, w)
+        acc = agg.accumulate(agg.init(params), updated, params, w)
         params = agg.finalize(params, acc)
-        mean_loss = jnp.sum(losses * w) / jnp.maximum(w.sum(), 1.0)
+        wsum = w.sum()
+        # NaN, not a fake near-0 datapoint, when nobody was selected
+        # (matching the async engine's empty-buffer convention)
+        mean_loss = jnp.where(
+            wsum > 0, jnp.sum(losses * w) / jnp.maximum(wsum, 1.0), jnp.nan
+        )
         return params, sched_state, selected, mean_loss
 
     return round_fn
+
+
+def _make_round_fn(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator):
+    """Jitted per-round step (legacy helper for ``fl/rounds.py``)."""
+    return jax.jit(_make_round_core(task, cfg, policy, agg))

@@ -10,6 +10,7 @@ import argparse
 from typing import Any, Dict, Optional
 
 from repro.engine import RunConfig, dump_json, policy_names
+from repro.engine.config import RNG_IMPLS
 from repro.fl.task import FLTask
 
 
@@ -36,6 +37,19 @@ def add_common_args(ap: argparse.ArgumentParser, defaults: Dict[str, Any]) -> No
     ap.add_argument("--data-scale", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    # --- hot loop ---
+    ap.add_argument("--steps-per-chunk", type=int, default=None,
+                    help="rounds advanced per host dispatch (donated scan "
+                         "chunk); default: auto, min(eval cadence, 64). "
+                         "Bit-for-bit identical to per-step execution.")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip materializing the (rounds, n) selection "
+                         "matrix; load stats come from the device-resident "
+                         "accumulators (required at fleet scale)")
+    ap.add_argument("--rng-impl", default=None, choices=sorted(RNG_IMPLS),
+                    help="PRNG implementation for the run key (default: "
+                         "threefry PRNGKey, bit-compatible with older runs; "
+                         "rbg/unsafe_rbg are faster at fleet scale)")
 
 
 def build_task(args: argparse.Namespace) -> FLTask:
@@ -68,6 +82,9 @@ def build_run_config(args: argparse.Namespace, mode: str, eval_div: int,
         rounds=args.rounds, local_epochs=args.local_epochs,
         batch_size=args.batch_size, lr0=args.lr, seed=args.seed,
         eval_every=max(args.rounds // eval_div, 1),
+        steps_per_chunk=args.steps_per_chunk,
+        collect_history=False if args.no_history else None,
+        rng_impl=args.rng_impl,
         **extra,
     )
 

@@ -68,7 +68,8 @@ def main() -> None:
         f"async policy={cfg.policy} profile={args.latency_profile} "
         f"n={cfg.n_clients} k={cfg.k} m={cfg.m} buffer={cfg.resolved_buffer_size()} "
         f"steps={cfg.rounds} aggregator={cfg.resolved_aggregator()} "
-        f"staleness=(1+s)^-{args.staleness_weight}"
+        f"staleness=(1+s)^-{args.staleness_weight} "
+        f"chunk={cfg.resolved_steps_per_chunk()}"
     )
     res = run_engine(AsyncEngine(task, cfg), progress=True)
 
@@ -84,10 +85,15 @@ def main() -> None:
           f"Var random={load_metric.random_selection_var(cfg.n_clients, cfg.k):.3f} "
           f"Var markov*={load_metric.optimal_var(cfg.n_clients, cfg.k, cfg.m):.3f}")
     print(f"staleness: mean={ws['mean_staleness']:.2f} max={ws['max_staleness']}")
-    if res.selection is not None:
+    # load_stats now come from the device-resident accumulators whenever
+    # the (rounds, n) history is not materialized — fleet scale included
+    if res.load_stats:
         es = res.load_stats
         print(f"dispatch cohorts: mean={es['mean_cohort']:.2f} std={es['std_cohort']:.2f} "
               f"range [{es['min_cohort']}, {es['max_cohort']}]")
+        print(f"X_round: E[X]={es['mean_X']:.3f} Var[X]={es['var_X']:.3f} "
+              f"(samples {es['num_samples']}, "
+              f"{'history' if res.selection is not None else 'accumulators'})")
     if res.records:
         last = res.records[-1]
         print(f"final: acc={last.accuracy:.4f} eval_loss={last.eval_loss:.4f} "

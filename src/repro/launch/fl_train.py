@@ -42,7 +42,8 @@ def main() -> None:
     task = build_task(args)
     cfg = build_run_config(args, mode="sync", eval_div=30)
     print(f"policy={cfg.policy} n={cfg.n_clients} k={cfg.k} m={cfg.m} "
-          f"rounds={cfg.rounds} aggregator={cfg.resolved_aggregator()}")
+          f"rounds={cfg.rounds} aggregator={cfg.resolved_aggregator()} "
+          f"chunk={cfg.resolved_steps_per_chunk()}")
     res = run_engine(SyncEngine(task, cfg), progress=True)
 
     stats = res.load_stats

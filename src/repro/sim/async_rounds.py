@@ -58,7 +58,10 @@ def make_async_step(
         "fedbuff", staleness_mode=acfg.staleness_mode,
         staleness_exp=acfg.staleness_exp,
     )
-    return _make_async_step(task, cfg, policy, agg, acfg.resolved_profile())
+    init_state, step, _core = _make_async_step(
+        task, cfg, policy, agg, acfg.resolved_profile()
+    )
+    return init_state, step
 
 
 def run_async_training(

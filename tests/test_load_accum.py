@@ -1,0 +1,164 @@
+"""The device-resident selection accumulators must reproduce
+``empirical_load_stats`` computed from the materialized history.
+
+Three layers:
+  * a hypothesis property test over arbitrary (T, n) selection matrices —
+    the accumulator recurrence itself against the numpy reference;
+  * ``simulate_stats`` (one fused scan, no history) against
+    ``empirical_load_stats(simulate(...))`` for every registered policy;
+  * both engines: one ``run_chunk`` per policy returns the final state
+    *and* the stacked selection history, so the accumulator statistics
+    and the history-derived statistics come from the same realized run.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import MNIST_CNN
+from repro.core import load_metric as lm
+from repro.core.selection import make_policy, simulate, simulate_stats
+from repro.data.synthetic import make_image_dataset
+from repro.engine import AsyncEngine, RunConfig, SyncEngine, policy_names
+from repro.engine.chunk import dealias_pytree
+
+ALL_POLICIES = ("random", "markov", "markov_probs", "markov_hetero",
+                "oldest_age", "round_robin", "gumbel_age")
+
+SMALL_CNN = dataclasses.replace(
+    MNIST_CNN, name="paper-cnn-mnist-accum", image_size=8,
+    conv_channels=(4, 8), fc_width=16,
+)
+
+
+def _accum_stats_from_history(history: np.ndarray) -> dict:
+    acc = lm.init_selection_accum(history.shape[1])
+    step = jax.jit(lm.update_selection_accum)
+    for row in np.asarray(history, dtype=bool):
+        acc = step(acc, jnp.asarray(row))
+    return lm.selection_stats_from_accum(acc)
+
+
+def _assert_stats_match(accum: dict, ref: dict):
+    assert set(accum) == set(ref)
+    assert accum["num_samples"] == ref["num_samples"]
+    assert accum["min_cohort"] == ref["min_cohort"]
+    assert accum["max_cohort"] == ref["max_cohort"]
+    for key in ("mean_X", "var_X", "mean_cohort", "std_cohort"):
+        np.testing.assert_allclose(accum[key], ref[key], rtol=1e-5,
+                                   atol=1e-6, err_msg=key)
+
+
+def test_registered_policy_set_is_exactly_the_seven():
+    assert set(ALL_POLICIES) <= set(policy_names())
+
+
+# ---------------------------------------------------------------------------
+# Property test: the recurrence vs the numpy reference
+# ---------------------------------------------------------------------------
+
+try:  # property test only where hypothesis is installed (CI always is);
+    # the policy/engine comparisons below run regardless
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.lists(
+            st.lists(st.booleans(), min_size=5, max_size=5),
+            min_size=1, max_size=40,
+        )
+    )
+    def test_accum_matches_empirical_load_stats_on_arbitrary_histories(rows):
+        history = np.asarray(rows, dtype=bool)  # (T, 5)
+        _assert_stats_match(
+            _accum_stats_from_history(history), lm.empirical_load_stats(history)
+        )
+
+except ImportError:  # pragma: no cover
+
+    def test_accum_matches_empirical_load_stats_on_arbitrary_histories():
+        pytest.skip("hypothesis not installed")
+
+
+def test_accum_no_sample_before_second_selection():
+    # a client's first selection opens its window and yields no X sample
+    history = np.zeros((4, 3), dtype=bool)
+    history[1, 0] = True
+    stats = _accum_stats_from_history(history)
+    assert stats["num_samples"] == 0 and np.isnan(stats["mean_X"])
+    history[3, 0] = True
+    stats = _accum_stats_from_history(history)
+    assert stats["num_samples"] == 1 and stats["mean_X"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Every registered policy: fused-scan stats == history stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_simulate_stats_matches_history_for_policy(name):
+    n, k, m, rounds = 24, 5, 6, 60
+    key = jax.random.PRNGKey(7)
+    ref = lm.empirical_load_stats(simulate(make_policy(name, n, k, m), key, n, rounds))
+    stats = simulate_stats(make_policy(name, n, k, m), key, n, rounds, k)
+    _assert_stats_match(stats, ref)
+
+
+# ---------------------------------------------------------------------------
+# Both engines: accumulator state vs the same run's stacked history
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_task():
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        "mnist-accum", 10, 8, 1, 120, 60, seed=0, difficulty=0.8
+    )
+    return make_cnn_task(SMALL_CNN, train, test, n_clients=12)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_per_step_driving_also_feeds_accumulators(tiny_task, mode):
+    # Engine.step must fold the accumulators exactly like run_chunk does —
+    # finalize reads them whenever the history is off
+    kw = dict(profile="mobile", buffer_size=3) if mode == "async" else {}
+    cfg = RunConfig(
+        n_clients=12, k=3, m=4, policy="markov", rounds=6,
+        local_epochs=1, batch_size=5, eval_every=6, mode=mode, **kw,
+    )
+    make = SyncEngine if mode == "sync" else AsyncEngine
+    engine = make(tiny_task, cfg)
+    state = engine.init()
+    history = np.zeros((cfg.rounds, cfg.n_clients), dtype=bool)
+    for r in range(cfg.rounds):
+        state, aux = engine.step(state, r)
+        history[r] = np.asarray(aux["send"])
+    _assert_stats_match(
+        lm.selection_stats_from_accum(state["load_acc"]),
+        lm.empirical_load_stats(history),
+    )
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_engine_accumulators_match_history(tiny_task, mode, name):
+    kw = dict(profile="mobile", buffer_size=3) if mode == "async" else {}
+    cfg = RunConfig(
+        n_clients=12, k=3, m=4, policy=name, rounds=6,
+        local_epochs=1, batch_size=5, eval_every=6, mode=mode, **kw,
+    )
+    make = SyncEngine if mode == "sync" else AsyncEngine
+    engine = make(tiny_task, cfg)
+    state = dealias_pytree(engine.init())
+    state, aux = engine.run_chunk(state, 0, cfg.rounds, with_history=True)
+    history = np.asarray(aux["send"])
+    assert history.shape == (cfg.rounds, cfg.n_clients)
+    _assert_stats_match(
+        lm.selection_stats_from_accum(state["load_acc"]),
+        lm.empirical_load_stats(history),
+    )
