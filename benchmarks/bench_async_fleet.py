@@ -4,9 +4,11 @@ training) measured two ways — the legacy per-step pattern (one host
 dispatch per step, non-donated state, one (n,) selection pull per step,
 exactly what ``run_engine`` did before chunking) against the chunked
 ``ChunkRunner`` path (donated ``lax.scan``, device-resident load
-accumulators, one transfer per chunk, counter-based RNG) — and (b) sync
+accumulators, one transfer per chunk, counter-based RNG) — (b) sync
 vs async federated training compared on *simulated* time-to-target
-accuracy under a straggler-heavy profile.
+accuracy under a straggler-heavy profile — and (c) ``run_sharded``: the
+mesh-sharded fleet state (per-device footprint + the O(devices * B) pop)
+against the single-device chunked path, on fake CPU devices.
 """
 from __future__ import annotations
 
@@ -31,12 +33,40 @@ CHUNK = 64
 FAST_RNG = "unsafe_rbg"
 
 
-def _make_sim_step(probs, m, profile, buffer_size, use_kernel):
+def _make_sim_step(probs, m, profile, buffer_size, use_kernel, n=None, mesh=None):
     """One engine sim step over the *full* event state (the async
     engine's bookkeeping minus local training): markov admission ->
     dispatch with sampled latency/dropout -> pop next-k completions ->
     clock advance -> availability re-arm. ``step(state, key)`` with
-    state = {sched, ev, speed, clock}."""
+    state = {sched, ev, speed, clock}.
+
+    With ``mesh`` (a 1-D fleet mesh; ``n`` required, divisible by the
+    mesh), the per-client state is sharded exactly like the
+    ``ShardedAsyncEngine`` carry and the pop runs through the
+    O(devices * B) ``sharded_next_k_events`` merge."""
+    if mesh is None:
+        def pop(ev):
+            return ev_mod.pop_events(ev, buffer_size, use_kernel=use_kernel)
+
+        def constrain(state):
+            return state
+    else:
+        from repro.core import distributed as dist
+        from repro.engine.sharded import fleet_state_sharding
+
+        axis = mesh.axis_names[0]
+        next_k = dist.sharded_next_k_events(mesh, n, buffer_size, axis=axis)
+
+        def pop(ev):
+            t, idx = next_k(ev["t_done"])
+            return ev_mod.apply_pop(ev, t, idx)
+
+        def constrain(state):
+            return jax.tree.map(
+                jax.lax.with_sharding_constraint,
+                state,
+                fleet_state_sharding(mesh, n, state, axis),
+            )
 
     def step(state, key):
         ev, ages, clock = state["ev"], state["sched"], state["clock"]
@@ -56,9 +86,7 @@ def _make_sim_step(probs, m, profile, buffer_size, use_kernel):
         ev = ev_mod.schedule_completions(
             ev, send, clock, latency, jnp.zeros((), jnp.int32), dropped
         )
-        t_ev, idx, valid, ev = ev_mod.pop_events(
-            ev, buffer_size, use_kernel=use_kernel
-        )
+        t_ev, idx, valid, ev = pop(ev)
         clock = jnp.maximum(clock, jnp.max(jnp.where(valid, t_ev, -jnp.inf)))
         clock = jnp.where(
             valid.any(), clock, jnp.maximum(clock, jnp.min(ev["next_avail"]))
@@ -73,7 +101,7 @@ def _make_sim_step(probs, m, profile, buffer_size, use_kernel):
             .at[ev_mod.scatter_idx(idx, valid)]
             .set(t_ev, mode="drop"),
         }
-        state = {**state, "ev": ev, "sched": ages, "clock": clock}
+        state = constrain({**state, "ev": ev, "sched": ages, "clock": clock})
         return state, {"send": send, "clock": clock}
 
     return step
@@ -212,6 +240,132 @@ def _bench_var_x_workload(csv_rows, n, m, profile, steps):
           f"[Var[X] {stats_old['var_X']:.1f} vs {stats_new['var_X']:.1f}]")
     csv_rows.append((f"async_var_x_workload_n{n}", ch,
                      f"steps={steps};legacy_us={per:.1f};speedup={speedup:.2f}x"))
+
+
+def _state_bytes(state) -> int:
+    def nbytes(arr):
+        try:
+            return arr.nbytes
+        except (NotImplementedError, AttributeError):
+            return 0  # typed PRNG key arrays hide their buffer; negligible
+
+    return sum(nbytes(leaf) for leaf in jax.tree.leaves(state))
+
+
+def run_sharded(csv_rows, trials: int = 3):
+    """ShardedAsyncEngine's hot loop vs the single-device chunked path:
+    the same sim step with the fleet state sharded over every local
+    device and the buffer pop routed through the O(devices * B)
+    local-top-B + all_gather + merge.
+
+    On fake CPU devices (XLA_FLAGS=--xla_force_host_platform_device_count=8,
+    the recipe CI uses) all shards share one physical CPU, so wall time
+    measures overhead, not the win — the decisive columns are the
+    *per-device* footprint (state bytes on one device, compiled
+    argument/temp sizes) and the O(devices * B) pop communication, which
+    is what lets the fleet outgrow a single accelerator's memory.
+    """
+    from repro.core import distributed as dist
+    from repro.engine.sharded import fleet_state_sharding, per_device_state_bytes
+
+    n_devs = jax.local_device_count()
+    print("\n== sharded fleet state: per-device footprint + chunked step ==")
+    if n_devs < 2:
+        print("  [single device: set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 for the "
+              "sharded-vs-single-device comparison; skipping]")
+        return
+    m = 10
+    profile = lat_mod.get_profile("lognormal")
+
+    def build(n, mesh):
+        k = max(int(n * 0.15), 1)
+        buf = min(max(n // 100, 16), 4096)
+        probs = jnp.asarray(lm.optimal_probs(n, k, m), jnp.float32)
+        step_fn = _make_sim_step(probs, m, profile, buf, use_kernel=False,
+                                 n=n, mesh=mesh)
+        # dealias *before* device_put: putting the same constant-cache
+        # buffer twice in one call can hand two leaves one buffer, which
+        # the donated chunk then (fatally) donates twice
+        state = dealias_pytree({
+            **_sim_state(n, profile, KEY),
+            "k_run": run_key(0, FAST_RNG),
+            "load_acc": lm.init_selection_accum(n, k),
+        })
+        if mesh is not None:
+            state = jax.device_put(
+                state, fleet_state_sharding(mesh, n, state, mesh.axis_names[0])
+            )
+        return step_fn, state, buf
+
+    def time_chunked(runner, snap):
+        # warm towards steady state + compile, then timed trials from
+        # copies of the snapshot (same regime for both paths)
+        snap, _ = runner(snap, 0, CHUNK, with_history=False)
+        snap, _ = runner(snap, CHUNK, CHUNK, with_history=False)
+        jax.block_until_ready(snap["clock"])
+        out = []
+        for _ in range(trials):
+            state = jax.tree.map(jnp.copy, snap)
+            t0 = time.time()
+            state, aux = runner(state, 2 * CHUNK, CHUNK, with_history=False)
+            _ = jax.device_get(aux)
+            out.append((time.time() - t0) / CHUNK * 1e6)
+        return float(np.median(out)), snap
+
+    def mem_line(step_fn, state):
+        sim = {k: v for k, v in state.items() if k not in ("k_run", "load_acc")}
+        stats = jax.jit(step_fn).lower(sim, KEY).compile().memory_analysis()
+        return int(stats.argument_size_in_bytes), int(stats.temp_size_in_bytes)
+
+    # --- timed comparison: one fleet size, sharded vs single device
+    n = 262_144
+    D = dist.resolve_fleet_shards(n, 0, n_devs)
+    mesh = dist.fleet_mesh(D)
+    dev0 = mesh.devices.flat[0]
+    single_fn, single_state, buf = build(n, None)
+    shard_fn, shard_state, _ = build(n, mesh)
+    single_us, single_state = time_chunked(
+        ChunkRunner(single_fn, aux_keys=("clock",)), single_state)
+    shard_us, shard_state = time_chunked(
+        ChunkRunner(shard_fn, aux_keys=("clock",)), shard_state)
+    full_b = _state_bytes(single_state)
+    per_dev_b = per_device_state_bytes(shard_state, dev0)
+    s_arg, s_tmp = mem_line(shard_fn, shard_state)
+    u_arg, u_tmp = mem_line(single_fn, single_state)
+    print(f"  n={n:>9,} buffer={buf}: single {single_us / 1e3:8.2f} ms/step "
+          f"state {full_b / 1e6:7.1f} MB | sharded x{D} "
+          f"{shard_us / 1e3:8.2f} ms/step state/dev {per_dev_b / 1e6:7.1f} MB "
+          f"(args {s_arg / 1e6:.1f} vs {u_arg / 1e6:.1f} MB, "
+          f"temps {s_tmp / 1e6:.1f} vs {u_tmp / 1e6:.1f} MB)")
+    csv_rows.append((
+        f"async_engine_step_n{n}_sharded{D}", shard_us,
+        f"buffer={buf};singledev_us={single_us:.1f};"
+        f"state_per_dev_B={per_dev_b};state_full_B={full_b};"
+        f"arg_B={s_arg};arg_full_B={u_arg};temp_B={s_tmp};temp_full_B={u_tmp}",
+    ))
+
+    # --- fleet size past a single accelerator's budget: sharded only
+    n = 4_194_304
+    D = dist.resolve_fleet_shards(n, 0, n_devs)
+    mesh = dist.fleet_mesh(D)
+    shard_fn, shard_state, buf = build(n, mesh)
+    runner = ChunkRunner(shard_fn, aux_keys=("clock",))
+    shard_state, _ = runner(shard_state, 0, 8, with_history=False)  # compile
+    jax.block_until_ready(shard_state["clock"])
+    t0 = time.time()
+    shard_state, aux = runner(shard_state, 8, 8, with_history=False)
+    _ = jax.device_get(aux)
+    us = (time.time() - t0) / 8 * 1e6
+    full_b = _state_bytes(shard_state)
+    per_dev_b = per_device_state_bytes(shard_state, mesh.devices.flat[0])
+    print(f"  n={n:>9,} buffer={buf}: sharded x{D} {us / 1e3:8.2f} ms/step | "
+          f"state/dev {per_dev_b / 1e6:7.1f} MB of {full_b / 1e6:7.1f} MB total "
+          f"({full_b / per_dev_b:.1f}x below the single-device footprint)")
+    csv_rows.append((
+        f"async_fleet_state_n{n}_sharded{D}", us,
+        f"buffer={buf};state_per_dev_B={per_dev_b};state_full_B={full_b}",
+    ))
 
 
 def run(csv_rows, rounds: int = 12):

@@ -12,9 +12,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import load_metric as lm, make_policy
+from repro.core.distributed import scheduler_comm_bytes
 from repro.kernels import ops
 
 KEY = jax.random.PRNGKey(0)
+
+# nominal fleet-mesh width for the reported scheduler communication
+# volume (matches the fake-device recipe of the sharded benchmarks/CI)
+COMM_DEVICES = 8
 
 
 def _markov_step(probs, m):
@@ -50,9 +55,17 @@ def run(csv_rows):
         for _ in range(3):
             jax.block_until_ready(ops.oldest_age_topk(agesf, kk))
         t_topk = (time.time() - t0) / 3 * 1e6
+        # the decentralization argument next to the measured times: per-round
+        # scheduler communication on a COMM_DEVICES-way fleet mesh — O(1)
+        # for the local Markov decisions vs O(devices * k) for the
+        # centralized top-k candidate gather
+        comm_mk, comm_old = scheduler_comm_bytes(n, k, COMM_DEVICES)
         print(f"n={n:>9,}: markov step {t_markov:10.0f}us | "
-              f"oldest-age top-{kk} {t_topk:10.0f}us")
-        csv_rows.append((f"sched_scale_n{n}", t_markov, f"topk_us={t_topk:.0f}"))
+              f"oldest-age top-{kk} {t_topk:10.0f}us | "
+              f"comm {comm_mk}B vs {comm_old:,}B ({COMM_DEVICES} devices)")
+        csv_rows.append((f"sched_scale_n{n}", t_markov,
+                         f"topk_us={t_topk:.0f};devices={COMM_DEVICES};"
+                         f"comm_markov_B={comm_mk};comm_oldest_B={comm_old}"))
 
     # steady-state age distribution matches pi (Eqs. 12-14)
     n, k = 100_000, 15_000

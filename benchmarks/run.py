@@ -70,7 +70,8 @@ def check_against_baseline(csv_rows, baseline_path: str, rtol: float) -> int:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: variance,scheduler,kernels,convergence,roofline,async")
+                    help="comma list: variance,scheduler,kernels,convergence,"
+                         "roofline,async,sharded")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--out", default=None,
@@ -113,6 +114,10 @@ def main() -> None:
         from benchmarks import bench_async_fleet
 
         bench_async_fleet.run(csv_rows, rounds=args.rounds)
+    if on("sharded"):
+        from benchmarks import bench_async_fleet
+
+        bench_async_fleet.run_sharded(csv_rows)
     if on("roofline"):
         from benchmarks import bench_roofline
 

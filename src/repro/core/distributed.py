@@ -8,18 +8,60 @@ independent per-device RNG fold, and the only cross-device traffic is the
 O(1) ``psum`` of cohort counts (vs. an O(n) gather that a centralized
 policy such as oldest-age top-k requires — which we also provide, for an
 honest comparison of communication volume).
+
+This module also owns the fleet-mesh primitives the sharded async engine
+(``repro.engine.sharded``) is built on: ``fleet_mesh`` (a 1-D device mesh
+over a ``fleet`` axis) and ``sharded_next_k_events`` — the O(devices * k)
+buffer-pop merge (per-shard local top-k, an ``all_gather`` of the
+``devices x k`` candidates, then a global merge) that replaces
+materializing the full (n,) completion-time vector on one device.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.aoi import age_update
+
+# the engine's fleet-sharding axis name (1-D mesh over client shards)
+FLEET_AXIS = "fleet"
+
+
+def fleet_mesh(shards: int = 0, axis: str = FLEET_AXIS) -> Mesh:
+    """1-D mesh of the first ``shards`` local devices over ``axis``
+    (``shards=0`` takes every available device)."""
+    devices = jax.devices()
+    d = shards or len(devices)
+    if d > len(devices):
+        raise ValueError(
+            f"requested {d} fleet shards but only {len(devices)} devices "
+            "are available (on CPU, XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N makes N fake devices)"
+        )
+    return Mesh(np.asarray(devices[:d]), (axis,))
+
+
+def resolve_fleet_shards(n: int, shards: int, available: int) -> int:
+    """Shard count for an ``n``-client fleet: ``shards`` when explicit
+    (must divide ``n`` so every device owns an equal client block), else
+    the largest divisor of ``n`` at most ``available`` — auto-detection
+    never fails, it just leaves devices idle for awkward fleet sizes."""
+    if shards:
+        if n % shards:
+            raise ValueError(
+                f"n_clients={n} is not divisible by mesh_shards={shards}; "
+                "pick a shard count dividing the fleet (or 0 to auto-detect)"
+            )
+        return shards
+    d = max(min(available, n), 1)
+    while n % d:
+        d -= 1
+    return d
 
 
 def markov_step_sharded(
@@ -60,16 +102,19 @@ def oldest_age_step_sharded(mesh: Mesh, axis: str, k: int):
     global top-k over the gathered per-shard candidates (communication
     O(devices * k), vs O(1) for the Markov policy — this asymmetry is the
     paper's decentralization argument, made concrete).
+
+    Ties break toward the lower *global* client index, deterministically,
+    matching the contract of ``sim/events.py``: ``lax.top_k`` is stable
+    (equal scores surface the lower local index first) and the gathered
+    candidate list is ordered by shard, so the flat merge prefers lower
+    shards — i.e. lower global ids — among equal ages. No RNG is involved.
     """
     spec = P(axis)
 
-    def local(ages, seed):
+    def local(ages):
         di = jax.lax.axis_index(axis)
-        key = jax.random.fold_in(jax.random.PRNGKey(seed[0]), di)
-        noise = jax.random.uniform(key, ages.shape, minval=0.0, maxval=0.5)
-        score = ages.astype(jnp.float32) + noise
-        kk = min(k, score.shape[0])
-        top_v, top_i = jax.lax.top_k(score, kk)
+        kk = min(k, ages.shape[0])
+        top_v, top_i = jax.lax.top_k(ages, kk)
         # global offset of this shard
         base = di * ages.shape[0]
         cand_v = jax.lax.all_gather(top_v, axis)  # (devices, kk)
@@ -84,13 +129,73 @@ def oldest_age_step_sharded(mesh: Mesh, axis: str, k: int):
         new_ages = age_update(ages, sel)
         return sel, new_ages, chosen
 
+    # ``chosen`` is replicated by construction (every device merges the
+    # same gathered candidates), which the static checker can't infer
     f = shard_map(
         local,
         mesh=mesh,
-        in_specs=(spec, P(None)),
+        in_specs=(spec,),
         out_specs=(spec, spec, P()),
+        check_rep=False,
     )
     return jax.jit(f)
+
+
+def sharded_next_k_events(
+    mesh: Mesh, n: int, k: int, axis: str = FLEET_AXIS
+) -> Callable:
+    """The sharded buffer pop: ``f(times (n,)) -> (t (k,), idx (k,))``,
+    bit-identical (values, indices, and tie order) to a global
+    ``lax.top_k(-times, k)`` over the full fleet.
+
+    Each shard extracts its local k earliest events with a stable local
+    top-k, the ``devices x k`` candidates are ``all_gather``-ed, and one
+    merge picks the global k — O(devices * k) communication per step
+    instead of materializing the (n,) completion-time vector on a single
+    device. Tie order is preserved for free: candidates arrive ordered by
+    (shard, local rank), both orderings ascending in global index, and
+    ``lax.top_k`` stability does the rest.
+
+    Fleets with ``n % devices != 0`` are padded with ``+inf`` sentinels up
+    to the next multiple (a padded slot can only surface as an *invalid*
+    pop — callers already mask by ``jnp.isfinite``). Returns a function to
+    be called under ``jit``; ``k <= n`` as everywhere in the event engine.
+    """
+    devices = mesh.shape[axis]
+    n_pad = -(-n // devices) * devices
+    spec = P(axis)
+
+    def local(times):  # (n_pad / devices,)
+        di = jax.lax.axis_index(axis)
+        shard = times.shape[0]
+        kk = min(k, shard)
+        neg_v, loc_i = jax.lax.top_k(-times, kk)
+        base = di * shard
+        cand_v = jax.lax.all_gather(neg_v, axis)  # (devices, kk)
+        cand_i = jax.lax.all_gather(loc_i + base, axis)
+        # k <= n <= devices * kk: the merge always has enough candidates
+        top_v, pos = jax.lax.top_k(cand_v.reshape(-1), k)
+        return -top_v, cand_i.reshape(-1)[pos]
+
+    # outputs are replicated by construction (every device merges the same
+    # gathered candidates); the static replication checker can't see that
+    # through the gather + indexing, hence check_rep=False
+    merge = shard_map(
+        local, mesh=mesh, in_specs=(spec,), out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+    def next_k(times):
+        if n_pad != n:
+            times = jnp.concatenate(
+                [times, jnp.full((n_pad - n,), jnp.inf, times.dtype)]
+            )
+        times = jax.lax.with_sharding_constraint(
+            times, NamedSharding(mesh, spec)
+        )
+        return merge(times)
+
+    return next_k
 
 
 def scheduler_comm_bytes(n: int, k: int, devices: int) -> Tuple[int, int]:

@@ -42,4 +42,5 @@ from repro.engine.api import (  # noqa: F401
 )
 from repro.engine.sync import SyncEngine  # noqa: F401
 from repro.engine.async_engine import AsyncEngine  # noqa: F401
+from repro.engine.sharded import ShardedAsyncEngine  # noqa: F401
 from repro.core.selection import Policy  # noqa: F401  (registers built-ins)

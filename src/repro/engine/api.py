@@ -60,11 +60,16 @@ class Engine(Protocol):
 
 
 def make_engine(task, cfg: RunConfig, policy=None, aggregator=None) -> Engine:
-    """Instantiate the engine matching ``cfg.mode``."""
+    """Instantiate the engine matching ``cfg.mode`` (and, for async runs
+    with ``mesh_shards`` set, the fleet-sharded variant)."""
     if cfg.mode == "sync":
         from repro.engine.sync import SyncEngine
 
         return SyncEngine(task, cfg, policy=policy, aggregator=aggregator)
+    if cfg.mesh_shards is not None:
+        from repro.engine.sharded import ShardedAsyncEngine
+
+        return ShardedAsyncEngine(task, cfg, policy=policy, aggregator=aggregator)
     from repro.engine.async_engine import AsyncEngine
 
     return AsyncEngine(task, cfg, policy=policy, aggregator=aggregator)

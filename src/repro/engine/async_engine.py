@@ -36,11 +36,10 @@ from repro.core.load_metric import (
     empirical_load_stats,
     init_selection_accum,
     selection_stats_from_accum,
-    update_selection_accum,
 )
 from repro.core.selection import Policy
 from repro.engine.aggregators import Aggregator
-from repro.engine.chunk import ChunkRunner, run_key
+from repro.engine.chunk import ChunkRunner, dealias_pytree, run_key, step_once
 from repro.engine.config import RoundRecord, RunConfig, RunResult
 from repro.engine.registry import make_aggregator, make_policy
 from repro.fl.client import make_local_update
@@ -90,11 +89,16 @@ class AsyncEngine:
             cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
         )
         self.profile = _resolved_profile(cfg.profile)
-        self._init_state, self._step_fn, core = _make_async_step(
-            task, cfg, self.policy, self.aggregator, self.profile
-        )
+        self._init_state, core = self._build_step()
         self._chunk = ChunkRunner(
             core, aux_keys=("loss", "clock", "version", "buffer_fill")
+        )
+
+    def _build_step(self):
+        """Step-builder hook: ``ShardedAsyncEngine`` overrides this to
+        inject the mesh-sharded pop and sharding constraints."""
+        return _make_async_step(
+            self.task, self.cfg, self.policy, self.aggregator, self.profile
         )
 
     def init(self) -> Dict:
@@ -106,17 +110,12 @@ class AsyncEngine:
         state = self._init_state(params, sched, jax.random.fold_in(k_run, 2**31))
         state["k_run"] = k_run
         state["load_acc"] = init_selection_accum(cfg.n_clients, cfg.k)
-        return state
+        # donation-safe from the start: step() routes through the donated
+        # chunk runner even for single steps
+        return dealias_pytree(state)
 
     def step(self, state: Dict, r: int):
-        k_run = state["k_run"]
-        jstate = {k: v for k, v in state.items() if k not in ("k_run", "load_acc")}
-        jstate, aux = self._step_fn(jstate, jax.random.fold_in(k_run, r))
-        jstate["k_run"] = k_run
-        # keep per-step driving consistent with run_chunk: finalize reads
-        # these accumulators whenever history is off
-        jstate["load_acc"] = update_selection_accum(state["load_acc"], aux["send"])
-        return jstate, aux
+        return step_once(self._chunk, state, r)
 
     def run_chunk(self, state: Dict, r0: int, length: int, with_history: bool):
         return self._chunk(state, r0, length, with_history)
@@ -182,14 +181,33 @@ class AsyncEngine:
 def _make_async_step(
     task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
     profile: lat_mod.LatencyProfile,
+    pop=None, replicate=None, constrain_state=None,
 ):
-    """Builds (init_state, jitted step, pure step core).
+    """Builds ``(init_state, step core)`` with ``step(state, key) ->
+    (state, aux)`` — the pure function the chunked scan body folds over
+    (``ChunkRunner`` also drives single steps through a length-1 chunk).
 
-    ``step(state, key) -> (state, aux)``; the un-jitted core is what the
-    chunked scan body folds over."""
+    The three optional hooks are the mesh-sharding seam
+    (``repro.engine.sharded`` supplies all of them; the single-device
+    engine runs with identity defaults):
+
+      * ``pop(ev) -> (t, idx, valid, ev')`` replaces the buffer pop;
+      * ``replicate(tree)`` pins cohort-sized (B,) intermediates to a
+        replicated layout so cross-device reduction order — and therefore
+        bitwise results — cannot drift from the single-device engine;
+      * ``constrain_state(state)`` re-asserts the fleet sharding of the
+        carry so the donated scan aliases buffers instead of resharding.
+    """
     n = cfg.n_clients
     B = cfg.resolved_buffer_size()
     H = cfg.max_versions
+    if pop is None:
+        def pop(ev):
+            return ev_mod.pop_events(ev, B, use_kernel=cfg.use_kernel)
+    if replicate is None:
+        replicate = lambda tree: tree  # noqa: E731
+    if constrain_state is None:
+        constrain_state = lambda state: state  # noqa: E731
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
@@ -238,7 +256,7 @@ def _make_async_step(
         ev = ev_mod.schedule_completions(ev, send, clock, latency, version, dropped)
 
         # --- pop the next B completions, advance the simulated clock
-        t_ev, idx, valid, ev = ev_mod.pop_events(ev, B, use_kernel=cfg.use_kernel)
+        t_ev, idx, valid, ev = pop(ev)
         new_clock = jnp.maximum(clock, jnp.max(jnp.where(valid, t_ev, -jnp.inf)))
         # an all-idle fleet inside availability gaps must not freeze the
         # clock: with nothing in flight to pop, jump to the earliest
@@ -249,17 +267,17 @@ def _make_async_step(
         )
 
         # --- local training from each client's dispatch-time model
-        disp_ver = ev["disp_ver"][idx]
+        disp_ver = replicate(ev["disp_ver"][idx])
         # versions older than the ring are trained from the oldest retained
         # model; staleness for weighting still uses the true dispatch version
         read_ver = jnp.clip(disp_ver, jnp.maximum(version - (H - 1), 0), version)
         disp_params = jax.tree.map(lambda h: h[read_ver % H], state["hist"])
-        shards = jax.tree.map(lambda a: a[idx], task.client_data)
+        shards = replicate(jax.tree.map(lambda a: a[idx], task.client_data))
         keys = jax.random.split(k_local, B)
         lr = lr_fn(jnp.maximum(disp_ver, 0))
-        updated, losses = jax.vmap(local_update, in_axes=(0, 0, 0, 0))(
+        updated, losses = replicate(jax.vmap(local_update, in_axes=(0, 0, 0, 0))(
             disp_params, shards, keys, lr
-        )
+        ))
 
         # --- buffered aggregation of deltas through the aggregator seam
         succ = valid & ~ev["dropped"][idx]
@@ -286,8 +304,9 @@ def _make_async_step(
             .at[ev_mod.scatter_idx(idx, valid)]
             .set(new_clock + gaps, mode="drop"),
         }
-        x_wall = t_ev - ev["last_done"][idx]
-        wall_ok = succ & (ev["last_done"][idx] >= 0.0)
+        last_done = replicate(ev["last_done"][idx])
+        x_wall = t_ev - last_done
+        wall_ok = succ & (last_done >= 0.0)
         wall_okf = wall_ok.astype(jnp.float32)
         ev = {
             **ev,
@@ -310,11 +329,11 @@ def _make_async_step(
             "updates": stats["updates"] + succ.astype(jnp.float32).sum(),
             "aggs": stats["aggs"] + has.astype(jnp.float32),
         }
-        state = {
+        state = constrain_state({
             **state,
             "params": params, "hist": hist, "sched": sched, "ev": ev,
             "clock": new_clock, "version": version, "stats": stats,
-        }
+        })
         aux = {
             "send": send,
             "loss": mean_loss,
@@ -324,4 +343,4 @@ def _make_async_step(
         }
         return state, aux
 
-    return init_state, jax.jit(step), step
+    return init_state, step

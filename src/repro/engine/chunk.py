@@ -88,6 +88,19 @@ class ChunkRunner:
         return fn(state, jnp.asarray(r0, jnp.int32))
 
 
+def step_once(runner: ChunkRunner, state: Dict, r: int):
+    """One engine step, driven through the chunked runner as a length-1
+    donated scan — the per-step path and the chunk path share a single
+    implementation of the ``_RUNNER_KEYS`` bookkeeping (key folding and
+    the device-resident selection accumulators), so the two can never
+    drift. Donates ``state`` like any chunk; engine ``init()`` states are
+    dealiased up front to keep that legal. Returns ``(state', aux)`` with
+    the leading length-1 axis squeezed off every aux leaf (history is
+    always kept at length 1, so ``aux`` includes ``send``)."""
+    state, aux = runner(state, r, 1, with_history=True)
+    return state, {k: v[0] for k, v in aux.items()}
+
+
 def dealias_pytree(tree):
     """Donation-safe copy of duplicated leaves.
 

@@ -75,6 +75,13 @@ class RunConfig:
     max_versions: int = 8  # ring of retained global models
     profile: Any = "lognormal"  # name or sim.latency.LatencyProfile
     use_kernel: Optional[bool] = None  # None: kernel when fleet is large
+    # shard the per-client fleet state over a 1-D device mesh
+    # (ShardedAsyncEngine). None -> single-device AsyncEngine; 0 ->
+    # auto-detect (largest divisor of n_clients <= local device count);
+    # d > 0 -> exactly d shards (must divide n_clients). Bit-for-bit
+    # identical to the unsharded engine for the same seed
+    # (tests/test_sharded_engine.py).
+    mesh_shards: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -98,6 +105,23 @@ class RunConfig:
                 f"rng_impl must be one of {RNG_IMPLS} (or None for the "
                 f"default PRNGKey), got {self.rng_impl!r}"
             )
+        if self.mesh_shards is not None:
+            if self.mode != "async":
+                raise ValueError(
+                    "mesh_shards requires mode='async' (fleet sharding is "
+                    f"an async-engine feature), got mode={self.mode!r}"
+                )
+            if self.mesh_shards < 0:
+                raise ValueError(
+                    f"mesh_shards must be >= 0 (0 = auto-detect devices), "
+                    f"got {self.mesh_shards}"
+                )
+            if self.mesh_shards > 0 and self.n_clients % self.mesh_shards:
+                raise ValueError(
+                    f"mesh_shards={self.mesh_shards} must divide "
+                    f"n_clients={self.n_clients} (every device owns an "
+                    "equal client block); use 0 to auto-detect"
+                )
 
     def cohort_width(self) -> int:
         """Padded cohort buffer width for variable-size policies."""

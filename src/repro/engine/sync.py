@@ -28,11 +28,10 @@ from repro.core.load_metric import (
     empirical_load_stats,
     init_selection_accum,
     selection_stats_from_accum,
-    update_selection_accum,
 )
 from repro.core.selection import Policy
 from repro.engine.aggregators import Aggregator
-from repro.engine.chunk import ChunkRunner, run_key
+from repro.engine.chunk import ChunkRunner, dealias_pytree, run_key, step_once
 from repro.engine.config import RoundRecord, RunConfig, RunResult
 from repro.engine.registry import make_aggregator, make_policy
 from repro.fl.client import make_local_update
@@ -63,7 +62,6 @@ class SyncEngine:
             cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
         )
         core = _make_round_core(task, cfg, self.policy, self.aggregator)
-        self._round_fn = jax.jit(core)
 
         def scan_step(state, key):
             params, sched, selected, loss = core(state["params"], state["sched"], key)
@@ -75,25 +73,17 @@ class SyncEngine:
         cfg = self.cfg
         key = run_key(cfg.seed, cfg.rng_impl)
         k_init, k_policy, k_run = jax.random.split(key, 3)
-        return {
+        # donation-safe from the start: step() routes through the donated
+        # chunk runner even for single steps
+        return dealias_pytree({
             "params": self.task.init(k_init),
             "sched": self.policy.init(k_policy, cfg.n_clients),
             "k_run": k_run,
             "load_acc": init_selection_accum(cfg.n_clients, cfg.k),
-        }
+        })
 
     def step(self, state: Dict, r: int):
-        params, sched, selected, loss = self._round_fn(
-            state["params"], state["sched"],
-            jax.random.fold_in(state["k_run"], r),
-        )
-        state = {
-            **state, "params": params, "sched": sched,
-            # keep per-step driving consistent with run_chunk: finalize
-            # reads these accumulators whenever history is off
-            "load_acc": update_selection_accum(state["load_acc"], selected),
-        }
-        return state, {"send": selected, "loss": loss}
+        return step_once(self._chunk, state, r)
 
     def run_chunk(self, state: Dict, r0: int, length: int, with_history: bool):
         return self._chunk(state, r0, length, with_history)

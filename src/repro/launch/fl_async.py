@@ -18,13 +18,16 @@ Examples:
       --latency-profile mobile --rounds 30   # per-client-rate admission
   PYTHONPATH=src python -m repro.launch.fl_async --latency-profile uniform \
       --policy random --rounds 30     # degenerate: reduces to sync FedAvg
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.fl_async --mesh-shards 0 \
+      --clients 200 --rounds 40       # fleet state sharded over 8 devices
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.core import load_metric
-from repro.engine import AsyncEngine, run_engine
+from repro.engine import make_engine, run_engine
 from repro.launch._fl_cli import (
     add_common_args,
     build_run_config,
@@ -51,6 +54,13 @@ def main() -> None:
     ap.add_argument("--staleness-weight", type=float, default=0.5,
                     help="polynomial discount exponent a in (1+s)^-a; 0 = constant")
     ap.add_argument("--max-versions", type=int, default=8)
+    ap.add_argument("--mesh-shards", type=int, default=None, metavar="D",
+                    help="shard the per-client fleet state over D devices "
+                         "(ShardedAsyncEngine; D must divide --clients). "
+                         "0 auto-detects available devices; on CPU, "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                         "fakes an 8-device mesh. Bit-for-bit identical to "
+                         "the single-device engine for the same seed.")
     args = ap.parse_args()
 
     task = build_task(args)
@@ -63,15 +73,19 @@ def main() -> None:
         buffer_size=args.buffer_size,
         max_versions=args.max_versions,
         profile=args.latency_profile,
+        mesh_shards=args.mesh_shards,
     )
+    engine = make_engine(task, cfg)
+    shards = getattr(engine, "mesh_shards", None)
     print(
         f"async policy={cfg.policy} profile={args.latency_profile} "
         f"n={cfg.n_clients} k={cfg.k} m={cfg.m} buffer={cfg.resolved_buffer_size()} "
         f"steps={cfg.rounds} aggregator={cfg.resolved_aggregator()} "
         f"staleness=(1+s)^-{args.staleness_weight} "
         f"chunk={cfg.resolved_steps_per_chunk()}"
+        + (f" mesh_shards={shards}" if shards else "")
     )
-    res = run_engine(AsyncEngine(task, cfg), progress=True)
+    res = run_engine(engine, progress=True)
 
     ws = res.wall_stats
     print("\n== load metric X (wall clock) ==")

@@ -48,7 +48,10 @@ class AsyncConfig:
 def make_async_step(
     task: FLTask, fl: FLConfig, acfg: AsyncConfig, policy: Policy
 ):
-    """Builds (init_state, step) for one async server step (legacy helper)."""
+    """Builds (init_state, jitted step) for one async server step (legacy
+    helper)."""
+    import jax
+
     from repro.engine.async_engine import _make_async_step
     from repro.engine.config import run_config_from_legacy
     from repro.engine.registry import make_aggregator
@@ -58,10 +61,10 @@ def make_async_step(
         "fedbuff", staleness_mode=acfg.staleness_mode,
         staleness_exp=acfg.staleness_exp,
     )
-    init_state, step, _core = _make_async_step(
+    init_state, step = _make_async_step(
         task, cfg, policy, agg, acfg.resolved_profile()
     )
-    return init_state, step
+    return init_state, jax.jit(step)
 
 
 def run_async_training(

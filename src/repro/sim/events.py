@@ -6,8 +6,10 @@ so every engine operation is a fused vector op and the whole engine jits
 into the training step. The only "priority queue" operation the async
 loop needs is *pop the k earliest events*, which is a top-k over negated
 times: the ``event_topk`` Pallas kernel at fleet scale, a plain
-``lax.top_k`` reference otherwise. Both paths break ties toward the
-lower client index, which the sync-equivalence test relies on.
+``lax.top_k`` reference otherwise — or, with the fleet state sharded
+over a device mesh, the ``core.distributed.sharded_next_k_events``
+local-top-k + gather + merge feeding ``apply_pop``. All paths break ties
+toward the lower client index, which the sync-equivalence test relies on.
 """
 from __future__ import annotations
 
@@ -81,6 +83,15 @@ def pop_events(
     client.
     """
     t, idx = next_k_events(ev["t_done"], k, use_kernel=use_kernel)
+    return apply_pop(ev, t, idx)
+
+
+def apply_pop(
+    ev: Dict[str, jnp.ndarray], t: jnp.ndarray, idx: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Bookkeeping shared by every pop path (kernel, reference, and the
+    mesh-sharded merge): mask invalid slots, return popped clients to
+    idle. ``(t, idx)`` is any next-k extraction over ``ev["t_done"]``."""
     valid = jnp.isfinite(t)
     idx_safe = jnp.where(valid, idx, 0)
     t_done = ev["t_done"].at[scatter_idx(idx, valid)].set(jnp.inf, mode="drop")

@@ -1,0 +1,201 @@
+"""Golden equivalence for the mesh-sharded async engine.
+
+``ShardedAsyncEngine`` on a ``fleet`` mesh of D devices must be
+*bit-for-bit* identical to ``AsyncEngine`` on one device for the same
+``RunConfig`` seed — same selection history, same per-step losses, same
+final params, same simulator telemetry — both per-step and chunked,
+across policies x aggregators. Every random draw keeps the exact (n,)
+shape and key schedule of the single-device engine and cohort-sized
+intermediates are pinned to a replicated layout, so any drift (a
+resharded reduction, a diverged key fold, a tie broken differently in the
+distributed pop) fails these tests on exact comparison.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+multi-device job does) to exercise a real 8-way mesh; on a single device
+the engine still routes through the shard_map pop on a 1-shard mesh.
+
+Also pins the deterministic lower-global-index tie-break of
+``oldest_age_step_sharded`` (the contract documented in ``sim/events.py``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import MNIST_CNN
+from repro.core import distributed as dist
+from repro.data.synthetic import make_image_dataset
+from repro.engine import (
+    AsyncEngine,
+    RunConfig,
+    ShardedAsyncEngine,
+    make_engine,
+    run_engine,
+)
+
+SMALL_CNN = dataclasses.replace(
+    MNIST_CNN, name="paper-cnn-mnist-sharded", image_size=8,
+    conv_channels=(4, 8), fc_width=32,
+)
+
+N = 16
+DEVICES = jax.local_device_count()
+SHARDS = dist.resolve_fleet_shards(N, 0, DEVICES)
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        "mnist-sharded", 10, 8, 1, 120, 60, seed=0, difficulty=0.8
+    )
+    return make_cnn_task(SMALL_CNN, train, test, n_clients=N)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_clients=N, k=4, m=4, policy="markov", rounds=5, local_epochs=1,
+        batch_size=5, eval_every=2, mode="async", buffer_size=3,
+        profile="mobile",
+    )
+    base.update(kw)
+    return RunConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _per_step(engine, rounds, n):
+    state = engine.init()
+    sel = np.zeros((rounds, n), dtype=bool)
+    losses = []
+    for r in range(rounds):
+        state, aux = engine.step(state, r)
+        sel[r] = np.asarray(aux["send"])
+        losses.append(float(aux["loss"]))
+    return state, sel, losses
+
+
+@pytest.mark.parametrize("agg", ["fedbuff", "fedavg"])
+@pytest.mark.parametrize("policy", ["markov", "oldest_age", "round_robin"])
+def test_sharded_matches_async_bit_for_bit(small_task, policy, agg):
+    cfg = _cfg(policy=policy, aggregator=agg)
+
+    ref_state, ref_sel, ref_losses = _per_step(
+        AsyncEngine(small_task, cfg), cfg.rounds, N
+    )
+
+    # per-step driving of the sharded engine
+    scfg = dataclasses.replace(cfg, mesh_shards=SHARDS)
+    sh_state, sh_sel, sh_losses = _per_step(
+        ShardedAsyncEngine(small_task, scfg), cfg.rounds, N
+    )
+    np.testing.assert_array_equal(sh_sel, ref_sel)
+    np.testing.assert_array_equal(sh_losses, ref_losses)
+    _assert_trees_equal(sh_state["params"], ref_state["params"])
+    for key, val in ref_state["stats"].items():
+        np.testing.assert_array_equal(
+            np.asarray(sh_state["stats"][key]), np.asarray(val), err_msg=key
+        )
+
+    # chunked driving (whole run in donated scan chunks)
+    res = run_engine(make_engine(small_task, dataclasses.replace(
+        scfg, steps_per_chunk=5
+    )))
+    np.testing.assert_array_equal(res.selection, ref_sel)
+    _assert_trees_equal(res.params, ref_state["params"])
+    np.testing.assert_array_equal(
+        [rec.train_loss for rec in res.records],
+        [ref_losses[r] for r in (1, 3, 4)],  # eval_every=2 cadence + final
+    )
+
+
+def test_sharded_wall_stats_match_async(small_task):
+    cfg = _cfg(rounds=6, eval_every=3)
+    ref = run_engine(AsyncEngine(small_task, cfg))
+    sh = run_engine(make_engine(small_task, dataclasses.replace(
+        cfg, mesh_shards=SHARDS
+    )))
+    assert set(ref.wall_stats) == set(sh.wall_stats)
+    for key, val in ref.wall_stats.items():
+        np.testing.assert_array_equal(sh.wall_stats[key], val, err_msg=key)
+    for key, val in ref.load_stats.items():
+        np.testing.assert_allclose(
+            sh.load_stats[key], val, rtol=1e-6, err_msg=key
+        )
+
+
+def test_make_engine_routes_mesh_shards(small_task):
+    eng = make_engine(small_task, _cfg(mesh_shards=SHARDS))
+    assert isinstance(eng, ShardedAsyncEngine)
+    assert eng.mesh_shards == SHARDS
+    auto = make_engine(small_task, _cfg(mesh_shards=0))
+    assert isinstance(auto, ShardedAsyncEngine)
+    assert auto.mesh_shards == SHARDS
+    plain = make_engine(small_task, _cfg())
+    assert not isinstance(plain, ShardedAsyncEngine)
+
+
+@pytest.mark.skipif(DEVICES < 2, reason="needs a multi-device mesh")
+def test_fleet_state_is_actually_sharded(small_task):
+    engine = ShardedAsyncEngine(small_task, _cfg(mesh_shards=SHARDS))
+    state = engine.init()
+    t_done = state["ev"]["t_done"]
+    shard_shapes = [s.data.shape for s in t_done.addressable_shards]
+    assert len(shard_shapes) == SHARDS
+    assert all(shape == (N // SHARDS,) for shape in shard_shapes)
+    # params are replicated: every device holds the full leaf
+    leaf = jax.tree.leaves(state["params"])[0]
+    assert all(s.data.shape == leaf.shape for s in leaf.addressable_shards)
+    # the engine's own memory accounting sees at most 1/SHARDS of the
+    # (n,)-wide event state on any one device
+    per_dev = engine.per_device_state_bytes(state)
+    assert per_dev > 0
+
+
+def test_mesh_shards_config_validation():
+    with pytest.raises(ValueError, match="mode='async'"):
+        RunConfig(mode="sync", mesh_shards=2)
+    with pytest.raises(ValueError, match="divide"):
+        _cfg(mesh_shards=3)  # 16 % 3 != 0
+    with pytest.raises(ValueError, match=">= 0"):
+        _cfg(mesh_shards=-1)
+
+
+def test_resolve_fleet_shards():
+    assert dist.resolve_fleet_shards(16, 0, 8) == 8
+    assert dist.resolve_fleet_shards(16, 0, 3) == 2  # largest divisor <= 3
+    assert dist.resolve_fleet_shards(10, 0, 8) == 5
+    assert dist.resolve_fleet_shards(7, 0, 4) == 1  # prime fleet, no fit
+    assert dist.resolve_fleet_shards(16, 4, 8) == 4  # explicit wins
+    with pytest.raises(ValueError, match="divisible"):
+        dist.resolve_fleet_shards(16, 3, 8)
+
+
+def test_oldest_age_sharded_tie_break_low_index():
+    n, k = N, 4
+    mesh = dist.fleet_mesh(SHARDS)
+    step = dist.oldest_age_step_sharded(mesh, dist.FLEET_AXIS, k)
+    # all ages tied: the k winners must be exactly the k lowest global
+    # indices, regardless of which shard they live on
+    sel, new_ages, chosen = step(jnp.full((n,), 5, jnp.int32))
+    np.testing.assert_array_equal(np.sort(np.asarray(chosen)), np.arange(k))
+    np.testing.assert_array_equal(
+        np.asarray(sel), np.arange(n) < k
+    )
+    # a strictly older client beats the tied block; remaining slots fill
+    # with the lowest tied indices
+    ages = jnp.full((n,), 5, jnp.int32).at[n - 1].set(9)
+    sel, _, chosen = step(ages)
+    assert bool(sel[n - 1])
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(chosen)), [0, 1, 2, n - 1]
+    )
+    # determinism: same input, same selection (no RNG in the tie-break)
+    sel2, _, _ = step(ages)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(sel2))
