@@ -71,7 +71,6 @@ def _make_sim_step(probs, m, profile, buffer_size, use_kernel, n=None, mesh=None
     def step(state, key):
         ev, ages, clock = state["ev"], state["sched"], state["clock"]
         k_sel, k_lat = jax.random.split(key)
-        k_drop = jax.random.fold_in(k_sel, 102)
         k_gap = jax.random.fold_in(k_sel, 103)
 
         idle = jnp.isinf(ev["t_done"])
@@ -82,7 +81,14 @@ def _make_sim_step(probs, m, profile, buffer_size, use_kernel, n=None, mesh=None
         ages = age_update(ages, send)
 
         latency = lat_mod.sample_latency(k_lat, profile, state["speed"])
-        dropped = lat_mod.sample_dropout(k_drop, profile, ages.shape[0])
+        # zero-dropout profiles skip the 102 fold (the engine does too;
+        # sample_dropout already skips the (n,) draw itself)
+        if profile.dropout > 0:
+            dropped = lat_mod.sample_dropout(
+                jax.random.fold_in(k_sel, 102), profile, ages.shape[0]
+            )
+        else:
+            dropped = jnp.zeros((ages.shape[0],), jnp.bool_)
         ev = ev_mod.schedule_completions(
             ev, send, clock, latency, jnp.zeros((), jnp.int32), dropped
         )
@@ -365,6 +371,178 @@ def run_sharded(csv_rows, trials: int = 3):
     csv_rows.append((
         f"async_fleet_state_n{n}_sharded{D}", us,
         f"buffer={buf};state_per_dev_B={per_dev_b};state_full_B={full_b}",
+    ))
+
+
+def _mlp_task(n, n_eval=4096, d=16, hidden=128, classes=10, examples=2,
+              seed=0):
+    """A real FLTask at fleet scale whose cohort training is the step's
+    dominant cost: tiny per-client shards (so a 262k-client fleet's data
+    fits in memory) feeding an MLP big enough that the vmapped cohort of
+    local updates dwarfs the event bookkeeping — the workload
+    cohort-parallel execution is for."""
+    from repro.fl.task import FLTask
+
+    kd, ke, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    teacher = jax.random.normal(kw, (d, classes), jnp.float32)
+
+    def draw(key, count):
+        x = jax.random.normal(key, (count, d), jnp.float32)
+        return x, jnp.argmax(x @ teacher, axis=-1)
+
+    x, y = draw(kd, n * examples)
+    cx, cy = x.reshape(n, examples, d), y.reshape(n, examples)
+    tx, ty = draw(ke, n_eval)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": (2.0 / d) ** 0.5
+            * jax.random.normal(k1, (d, hidden), jnp.float32),
+            "b1": jnp.zeros((hidden,), jnp.float32),
+            "w2": (2.0 / hidden) ** 0.5
+            * jax.random.normal(k2, (hidden, classes), jnp.float32),
+            "b2": jnp.zeros((classes,), jnp.float32),
+        }
+
+    def logits_fn(p, xb):
+        return jax.nn.relu(xb @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+    def loss_fn(p, batch):
+        logp = jax.nn.log_softmax(logits_fn(p, batch["x"]))
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+
+    def eval_batch_fn(p, data):
+        logits = logits_fn(p, data["x"])
+        logp = jax.nn.log_softmax(logits)
+        cnt = data["y"].shape[0]
+        return {
+            "loss": -jnp.take_along_axis(
+                logp, data["y"][:, None], axis=-1
+            ).sum() / cnt,
+            "accuracy": (logits.argmax(-1) == data["y"]).sum() / cnt,
+        }
+
+    eval_data = {"x": tx, "y": ty}
+    return FLTask(
+        name=f"bench-mlp-n{n}", init=init, loss_fn=loss_fn,
+        eval_fn=jax.jit(lambda p: eval_batch_fn(p, eval_data)),
+        client_data={"x": cx, "y": cy}, examples_per_client=examples,
+        eval_data=eval_data, eval_batch_fn=eval_batch_fn,
+    )
+
+
+def _time_engine_chunks(engines, chunk, trials):
+    """Per-step medians for several engines driving the same workload,
+    trials interleaved so every engine samples the same machine
+    conditions (shared boxes drift)."""
+    snaps = []
+    for eng in engines:
+        state = eng.init()
+        state, _ = eng.run_chunk(state, 0, chunk, False)  # compile + warm
+        state, _ = eng.run_chunk(state, chunk, chunk, False)
+        jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+        snaps.append(state)
+    times = [[] for _ in engines]
+    for _ in range(trials):
+        for i, eng in enumerate(engines):
+            st = jax.tree.map(jnp.copy, snaps[i])  # run_chunk donates
+            t0 = time.time()
+            st, aux = eng.run_chunk(st, 2 * chunk, chunk, False)
+            _ = jax.device_get(aux)
+            times[i].append((time.time() - t0) / chunk * 1e6)
+    return [float(np.median(t)) for t in times], snaps
+
+
+def run_cohort(csv_rows, trials: int = 3):
+    """Cohort-parallel execution (RunConfig.shard_cohort) vs the
+    replicated-cohort layout, on the *real* engines with training in the
+    step: flag-off pins every (B,)/(width,) intermediate replicated, so
+    all devices redundantly run the full cohort vmap; flag-on partitions
+    it, so each device trains cohort/devices clients and the aggregators
+    merge with one psum of the accumulator pytree. Unlike the sim-only
+    rows above, these rows measure what sharded fleets actually pay per
+    step when the cohort work dominates — the case the flag exists for."""
+    import dataclasses as dc
+
+    from repro.core import distributed as dist
+    from repro.engine import (
+        AsyncEngine,
+        RunConfig,
+        ShardedAsyncEngine,
+        SyncEngine,
+        make_engine,
+    )
+
+    n_devs = jax.local_device_count()
+    print("\n== cohort-parallel engine step: sharded vs replicated cohort ==")
+    if n_devs < 2:
+        print("  [single device: set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 for the "
+              "cohort-sharded comparison; skipping]")
+        return
+    chunk = 8
+
+    # --- async: 262k-client fleet, 2621-wide buffer (matches the sim-only
+    # sharded row's shape), MLP cohort training in the step
+    n = 262_144
+    k = max(int(n * 0.15), 1)
+    buf = min(max(n // 100, 16), 4096)
+    D = dist.resolve_fleet_shards(n, 0, n_devs)
+    task = _mlp_task(n)
+    base = RunConfig(
+        n_clients=n, k=k, m=10, policy="markov", rounds=4 * chunk,
+        local_epochs=1, batch_size=2, mode="async", buffer_size=buf,
+        profile="lognormal", steps_per_chunk=chunk, collect_history=False,
+        rng_impl=FAST_RNG, eval_every=4 * chunk,
+    )
+    single = AsyncEngine(task, base)
+    repl = ShardedAsyncEngine(task, dc.replace(base, mesh_shards=0))
+    coh = make_engine(task, dc.replace(
+        base, mesh_shards=0, shard_cohort=True
+    ))
+    (single_us, repl_us, coh_us), snaps = _time_engine_chunks(
+        [single, repl, coh], chunk, trials
+    )
+    repl_dev_b = repl.per_device_state_bytes(snaps[1])
+    coh_dev_b = coh.per_device_state_bytes(snaps[2])
+    print(f"  async n={n:>9,} buffer={buf}: single {single_us / 1e3:8.2f} "
+          f"ms/step | replicated x{D} {repl_us / 1e3:8.2f} ms/step | "
+          f"cohort-sharded x{D} {coh_us / 1e3:8.2f} ms/step "
+          f"({repl_us / coh_us:.2f}x vs replicated; state/dev "
+          f"{coh_dev_b / 1e6:.1f} vs {repl_dev_b / 1e6:.1f} MB)")
+    csv_rows.append((
+        f"async_engine_step_n{n}_sharded{D}_cohort", coh_us,
+        f"buffer={buf};replicated_us={repl_us:.1f};"
+        f"singledev_us={single_us:.1f};"
+        f"speedup_vs_replicated={repl_us / coh_us:.2f}x;"
+        f"state_per_dev_B={coh_dev_b};state_per_dev_replicated_B={repl_dev_b}",
+    ))
+
+    # --- sync: same fleet, k sized so the padded cohort vmap is the round
+    sk = 2048
+    sbase = RunConfig(
+        n_clients=n, k=sk, m=10, policy="markov", rounds=4 * chunk,
+        local_epochs=1, batch_size=2, mode="sync",
+        steps_per_chunk=chunk, collect_history=False, rng_impl=FAST_RNG,
+        eval_every=4 * chunk,
+    )
+    width = sbase.cohort_width()
+    ssingle = SyncEngine(task, sbase)
+    scoh = make_engine(task, dc.replace(
+        sbase, mesh_shards=0, shard_cohort=True
+    ))
+    (ssingle_us, scoh_us), _ = _time_engine_chunks(
+        [ssingle, scoh], chunk, trials
+    )
+    print(f"  sync  n={n:>9,} width={width}: single {ssingle_us / 1e3:8.2f} "
+          f"ms/round | cohort-sharded x{scoh.mesh_shards} "
+          f"{scoh_us / 1e3:8.2f} ms/round "
+          f"({ssingle_us / scoh_us:.2f}x vs single device)")
+    csv_rows.append((
+        f"sync_engine_round_n{n}_cohort{scoh.mesh_shards}", scoh_us,
+        f"width={width};singledev_us={ssingle_us:.1f};"
+        f"speedup_vs_single={ssingle_us / scoh_us:.2f}x",
     ))
 
 

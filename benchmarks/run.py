@@ -118,6 +118,7 @@ def main() -> None:
         from benchmarks import bench_async_fleet
 
         bench_async_fleet.run_sharded(csv_rows)
+        bench_async_fleet.run_cohort(csv_rows)
     if on("roofline"):
         from benchmarks import bench_roofline
 

@@ -46,6 +46,17 @@ def fleet_mesh(shards: int = 0, axis: str = FLEET_AXIS) -> Mesh:
     return Mesh(np.asarray(devices[:d]), (axis,))
 
 
+def cohort_padding(b: int, shards: int) -> int:
+    """Zero-weight slots appended to a ``b``-wide cohort so its axis
+    divides a ``shards``-device mesh — the cohort-parallel execution mode
+    shards the padded axis evenly and the padding slots carry weight 0
+    (they never touch the aggregate, the telemetry, or the event state,
+    which masks them exactly like invalid buffer slots)."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    return -b % shards
+
+
 def resolve_fleet_shards(n: int, shards: int, available: int) -> int:
     """Shard count for an ``n``-client fleet: ``shards`` when explicit
     (must divide ``n`` so every device owns an equal client block), else

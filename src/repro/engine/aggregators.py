@@ -41,13 +41,74 @@ from repro.engine.registry import register_aggregator
 
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
-    """The aggregation protocol both engines dispatch through."""
+    """The aggregation protocol both engines dispatch through.
+
+    ``additive`` declares that the accumulator is a plain sum over cohort
+    members: ``init`` is the zero element and accumulating two disjoint
+    cohort slices then adding the accumulators leaf-wise equals
+    accumulating the full cohort. It is what lets the cohort-sharded
+    execution mode run ``accumulate`` shard-locally and merge with a
+    single ``psum`` of the accumulator pytree
+    (``cohort_sharded_apply``). The default is False — psum-merging an
+    accumulator is only sound when the author has checked the property
+    (a non-zero ``init`` or a max/median-style statistic would be
+    silently wrong), so every aggregator opts in explicitly; all
+    built-ins do.
+    """
 
     name: str
     weigh: Callable  # (mask bool (B,), staleness i32 (B,)) -> f32 (B,)
     init: Callable  # (global_params) -> acc pytree
     accumulate: Callable  # (acc, updates, bases, weights) -> acc
     finalize: Callable  # (global_params, acc) -> new global_params
+    additive: bool = False
+
+
+def cohort_sharded_apply(
+    agg: Aggregator, mesh, axis: str, stacked_bases: bool = True
+) -> Callable:
+    """The aggregator seam's shard-local path for cohort-parallel
+    execution: ``apply(global_params, updates, bases, w) -> new params``
+    with the cohort axis of ``updates``/``w`` (and ``bases`` when
+    stacked) laid out over ``axis`` of ``mesh``.
+
+    Each device runs ``agg.init``/``agg.accumulate`` over its own
+    ``B/devices`` cohort slice, the accumulator pytrees are merged by one
+    ``psum`` — O(params) cross-device traffic instead of shipping the
+    ``B x params`` update stack through replication — and ``finalize``
+    runs on the replicated merged accumulator. Requires ``agg.additive``
+    and a cohort length divisible by the mesh (engines pad the cohort
+    with zero-weight slots to the next multiple).
+
+    ``stacked_bases=False`` is the sync engine's convention: ``bases`` is
+    the *unstacked* global tree, replicated, broadcast lazily inside
+    ``accumulate``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if not agg.additive:
+        raise ValueError(
+            f"aggregator {agg.name!r} is not additive: its accumulator "
+            "cannot be merged by psum, so it cannot run cohort-sharded "
+            "(drop shard_cohort for this aggregator)"
+        )
+    spec = P(axis)
+
+    def apply(g, updates, bases, w):
+        def local(g_l, u_l, b_l, w_l):
+            acc = agg.accumulate(agg.init(g_l), u_l, b_l, w_l)
+            return jax.lax.psum(acc, axis)
+
+        merged = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), spec, spec if stacked_bases else P(), spec),
+            out_specs=P(),
+        )(g, updates, bases, w)
+        return agg.finalize(g, merged)
+
+    return apply
 
 
 def staleness_weight(
@@ -95,7 +156,8 @@ def make_fedavg() -> Aggregator:
 
         return jax.tree.map(fin, g, acc["usum"])
 
-    return Aggregator("fedavg", weigh, init, accumulate, finalize)
+    return Aggregator("fedavg", weigh, init, accumulate, finalize,
+                      additive=True)
 
 
 def _delta_aggregator(name: str, staleness_mode: str, staleness_exp: float,
@@ -135,7 +197,8 @@ def _delta_aggregator(name: str, staleness_mode: str, staleness_exp: float,
 
         return jax.tree.map(fin, g, acc["dsum"])
 
-    return Aggregator(name, weigh, init, accumulate, finalize)
+    return Aggregator(name, weigh, init, accumulate, finalize,
+                      additive=True)
 
 
 @register_aggregator("fedbuff")

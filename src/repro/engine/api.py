@@ -52,6 +52,8 @@ class Engine(Protocol):
 
     def eval_params(self, state: Dict): ...
 
+    def evaluate(self, state: Dict) -> Dict: ...
+
     def record(self, r: int, aux: Dict, ev: Dict) -> RoundRecord: ...
 
     def progress_line(self, rec: RoundRecord, elapsed: float) -> str: ...
@@ -110,7 +112,9 @@ def run_engine(engine: Engine, progress: bool = False) -> RunResult:
             sel_hist[r0:r0 + length] = aux.pop("send")
         if do_eval:
             r = r0 + length - 1
-            ev = engine.task.eval_fn(engine.eval_params(state))
+            # engines own their eval: cohort-sharded engines score the
+            # held-out set with the eval-batch axis sharded over the mesh
+            ev = engine.evaluate(state)
             rec = engine.record(r, {k: v[-1] for k, v in aux.items()}, ev)
             records.append(rec)
             if progress:

@@ -123,6 +123,12 @@ class AsyncEngine:
     def eval_params(self, state: Dict):
         return state["params"]
 
+    def evaluate(self, state: Dict) -> Dict:
+        """Held-out eval on the current global params. Cohort-sharded
+        engines override this to shard the eval-batch axis over the mesh
+        (params stay replicated)."""
+        return self.task.eval_fn(self.eval_params(state))
+
     def record(self, r: int, aux: Dict, ev: Dict) -> RoundRecord:
         return RoundRecord(
             round=r + 1,
@@ -181,33 +187,48 @@ class AsyncEngine:
 def _make_async_step(
     task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
     profile: lat_mod.LatencyProfile,
-    pop=None, replicate=None, constrain_state=None,
+    pop=None, cohort_layout=None, constrain_state=None,
+    aggregate=None, cohort_pad: int = 0,
 ):
     """Builds ``(init_state, step core)`` with ``step(state, key) ->
     (state, aux)`` — the pure function the chunked scan body folds over
     (``ChunkRunner`` also drives single steps through a length-1 chunk).
 
-    The three optional hooks are the mesh-sharding seam
-    (``repro.engine.sharded`` supplies all of them; the single-device
-    engine runs with identity defaults):
+    The optional hooks are the mesh-sharding seam (``repro.engine.sharded``
+    supplies them; the single-device engine runs with identity defaults):
 
       * ``pop(ev) -> (t, idx, valid, ev')`` replaces the buffer pop;
-      * ``replicate(tree)`` pins cohort-sized (B,) intermediates to a
-        replicated layout so cross-device reduction order — and therefore
-        bitwise results — cannot drift from the single-device engine;
+      * ``cohort_layout(tree)`` decides the device layout of every
+        cohort-sized (B,) intermediate. The bit-exact sharded engine pins
+        them *replicated* so cross-device reduction order — and therefore
+        bitwise results — cannot drift from the single-device engine; the
+        cohort-parallel mode (``RunConfig.shard_cohort``) lays them out
+        ``P(fleet)`` instead so each device trains only its slice of the
+        cohort;
+      * ``aggregate(params, updates, bases, w) -> params`` replaces the
+        inline ``init/accumulate/finalize`` chain (the cohort-parallel
+        mode routes it through ``aggregators.cohort_sharded_apply``:
+        shard-local accumulation merged by one psum);
+      * ``cohort_pad`` appends that many zero-weight slots to the popped
+        cohort so the padded axis divides the mesh (invalid slots, masked
+        everywhere exactly like an under-filled buffer);
       * ``constrain_state(state)`` re-asserts the fleet sharding of the
         carry so the donated scan aliases buffers instead of resharding.
     """
     n = cfg.n_clients
     B = cfg.resolved_buffer_size()
+    Bp = B + cohort_pad
     H = cfg.max_versions
     if pop is None:
         def pop(ev):
             return ev_mod.pop_events(ev, B, use_kernel=cfg.use_kernel)
-    if replicate is None:
-        replicate = lambda tree: tree  # noqa: E731
+    if cohort_layout is None:
+        cohort_layout = lambda tree: tree  # noqa: E731
     if constrain_state is None:
         constrain_state = lambda state: state  # noqa: E731
+    if aggregate is None:
+        def aggregate(g, updates, bases, w):
+            return agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
@@ -235,7 +256,6 @@ def _make_async_step(
         # bit-for-bit comparable; latency/dropout/gap keys are fresh folds
         k_sel, k_local = jax.random.split(key)
         k_lat = jax.random.fold_in(k_sel, 101)
-        k_drop = jax.random.fold_in(k_sel, 102)
         k_gap = jax.random.fold_in(k_sel, 103)
 
         # --- admission control: idle+available clients consult the policy
@@ -250,13 +270,35 @@ def _make_async_step(
             prev_ages, send, stats["ep_sx"], stats["ep_sx2"], stats["ep_cnt"]
         )
 
-        # --- dispatch: sample wall-clock latencies, mark in flight
+        # --- dispatch: sample wall-clock latencies, mark in flight.
+        # zero-dropout profiles skip the dropout path entirely — the 102
+        # key fold here plus the constant-folding of the zeros mask
+        # (sample_dropout already skips the (n,) draw itself). No other
+        # key depends on the 102 fold, so results are unchanged — pinned
+        # by tests/test_cohort_engine.py
         latency = lat_mod.sample_latency(k_lat, profile, state["speed"])
-        dropped = lat_mod.sample_dropout(k_drop, profile, n)
+        if profile.dropout > 0:
+            dropped = lat_mod.sample_dropout(
+                jax.random.fold_in(k_sel, 102), profile, n
+            )
+        else:
+            dropped = jnp.zeros((n,), jnp.bool_)
         ev = ev_mod.schedule_completions(ev, send, clock, latency, version, dropped)
 
         # --- pop the next B completions, advance the simulated clock
         t_ev, idx, valid, ev = pop(ev)
+        if cohort_pad:
+            # pad the cohort to the mesh multiple with invalid slots:
+            # t=+inf/valid=False masks them out of the clock advance, the
+            # weights, the telemetry, and both scatters, exactly like an
+            # under-filled buffer slot
+            t_ev = jnp.concatenate(
+                [t_ev, jnp.full((cohort_pad,), jnp.inf, t_ev.dtype)]
+            )
+            idx = jnp.concatenate([idx, jnp.zeros((cohort_pad,), idx.dtype)])
+            valid = jnp.concatenate(
+                [valid, jnp.zeros((cohort_pad,), valid.dtype)]
+            )
         new_clock = jnp.maximum(clock, jnp.max(jnp.where(valid, t_ev, -jnp.inf)))
         # an all-idle fleet inside availability gaps must not freeze the
         # clock: with nothing in flight to pop, jump to the earliest
@@ -267,15 +309,22 @@ def _make_async_step(
         )
 
         # --- local training from each client's dispatch-time model
-        disp_ver = replicate(ev["disp_ver"][idx])
+        disp_ver = cohort_layout(ev["disp_ver"][idx])
         # versions older than the ring are trained from the oldest retained
         # model; staleness for weighting still uses the true dispatch version
         read_ver = jnp.clip(disp_ver, jnp.maximum(version - (H - 1), 0), version)
-        disp_params = jax.tree.map(lambda h: h[read_ver % H], state["hist"])
-        shards = replicate(jax.tree.map(lambda a: a[idx], task.client_data))
+        disp_params = cohort_layout(
+            jax.tree.map(lambda h: h[read_ver % H], state["hist"])
+        )
+        shards = cohort_layout(jax.tree.map(lambda a: a[idx], task.client_data))
         keys = jax.random.split(k_local, B)
+        if cohort_pad:
+            # the first B keys must stay the exact draws of the unpadded
+            # engine (split(k, Bp) has a different prefix); padded slots
+            # reuse the last real key — their updates carry weight 0
+            keys = keys[jnp.minimum(jnp.arange(Bp), B - 1)]
         lr = lr_fn(jnp.maximum(disp_ver, 0))
-        updated, losses = replicate(jax.vmap(local_update, in_axes=(0, 0, 0, 0))(
+        updated, losses = cohort_layout(jax.vmap(local_update, in_axes=(0, 0, 0, 0))(
             disp_params, shards, keys, lr
         ))
 
@@ -286,8 +335,7 @@ def _make_async_step(
         wsum = w.sum()
         has = wsum > 0
         denom = jnp.maximum(wsum, 1e-9)
-        acc = agg.accumulate(agg.init(state["params"]), updated, disp_params, w)
-        params = agg.finalize(state["params"], acc)
+        params = aggregate(state["params"], updated, disp_params, w)
         version = version + has.astype(jnp.int32)
         hist = jax.tree.map(
             lambda h, p: h.at[version % H].set(p), state["hist"], params
@@ -298,13 +346,17 @@ def _make_async_step(
         # --- completed clients go idle; wall-clock AoI samples
         # gaps are i.i.d. — draw only the B popped clients' worth
         gaps = lat_mod.sample_avail_gap(k_gap, profile, B)
+        if cohort_pad:
+            gaps = jnp.concatenate(
+                [gaps, jnp.zeros((cohort_pad,), gaps.dtype)]
+            )
         ev = {
             **ev,
             "next_avail": ev["next_avail"]
             .at[ev_mod.scatter_idx(idx, valid)]
             .set(new_clock + gaps, mode="drop"),
         }
-        last_done = replicate(ev["last_done"][idx])
+        last_done = cohort_layout(ev["last_done"][idx])
         x_wall = t_ev - last_done
         wall_ok = succ & (last_done >= 0.0)
         wall_okf = wall_ok.astype(jnp.float32)

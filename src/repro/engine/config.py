@@ -80,8 +80,20 @@ class RunConfig:
     # auto-detect (largest divisor of n_clients <= local device count);
     # d > 0 -> exactly d shards (must divide n_clients). Bit-for-bit
     # identical to the unsharded engine for the same seed
-    # (tests/test_sharded_engine.py).
+    # (tests/test_sharded_engine.py). With mode="sync" it is only
+    # meaningful together with ``shard_cohort`` (the mesh then shards the
+    # cohort axis; sync has no per-client device state).
     mesh_shards: Optional[int] = None
+    # cohort-parallel execution: partition the popped cohort (async) /
+    # the round's cohort vmap (sync) across the device mesh instead of
+    # replicating it, with shard-local aggregator accumulation merged by
+    # one psum of the accumulator pytree. Trades bit-exactness for
+    # throughput: flag-off is bit-for-bit identical to the single-device
+    # engines; flag-on is allclose-equivalent (cross-device reduction
+    # order differs; see tests/test_cohort_engine.py for the pinned
+    # tolerance). Requires mesh_shards (and >= 2 devices at engine
+    # construction).
+    shard_cohort: bool = False
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -106,22 +118,31 @@ class RunConfig:
                 f"default PRNGKey), got {self.rng_impl!r}"
             )
         if self.mesh_shards is not None:
-            if self.mode != "async":
+            if self.mode != "async" and not self.shard_cohort:
                 raise ValueError(
                     "mesh_shards requires mode='async' (fleet sharding is "
-                    f"an async-engine feature), got mode={self.mode!r}"
+                    "an async-engine feature) or shard_cohort=True (the "
+                    "mesh then shards the sync cohort axis), got "
+                    f"mode={self.mode!r}"
                 )
             if self.mesh_shards < 0:
                 raise ValueError(
                     f"mesh_shards must be >= 0 (0 = auto-detect devices), "
                     f"got {self.mesh_shards}"
                 )
-            if self.mesh_shards > 0 and self.n_clients % self.mesh_shards:
+            if (self.mode == "async" and self.mesh_shards > 0
+                    and self.n_clients % self.mesh_shards):
                 raise ValueError(
                     f"mesh_shards={self.mesh_shards} must divide "
                     f"n_clients={self.n_clients} (every device owns an "
                     "equal client block); use 0 to auto-detect"
                 )
+        if self.shard_cohort and self.mesh_shards is None:
+            raise ValueError(
+                "shard_cohort=True needs a device mesh: set mesh_shards "
+                "(0 = auto-detect) — without one the cohort would silently "
+                "stay replicated"
+            )
 
     def cohort_width(self) -> int:
         """Padded cohort buffer width for variable-size policies."""

@@ -56,7 +56,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import distributed as dist
 from repro.core.selection import Policy
-from repro.engine.aggregators import Aggregator
+from repro.engine.aggregators import Aggregator, cohort_sharded_apply
 from repro.engine.async_engine import AsyncEngine, _make_async_step
 from repro.engine.config import RunConfig
 from repro.fl.task import FLTask
@@ -104,6 +104,42 @@ def fleet_state_sharding(mesh: Mesh, n: int, state: Dict, axis: str) -> Dict:
     }
 
 
+def require_cohort_mesh(shards: int, what: str) -> None:
+    """``shard_cohort=True`` on a 1-device mesh would be a silent no-op
+    (the "sharded" cohort is the whole cohort) — reject it loudly."""
+    if shards < 2:
+        raise ValueError(
+            f"shard_cohort=True but {what} resolves to a {shards}-device "
+            "mesh — cohort-parallel execution needs >= 2 devices. On CPU, "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 fakes an "
+            "8-device mesh; otherwise drop shard_cohort."
+        )
+
+
+def make_sharded_eval(task: FLTask, mesh: Mesh, axis: str):
+    """Eval with the held-out batch axis sharded over ``axis`` (params
+    replicated): each device scores ``1/devices`` of the eval set and the
+    metric reductions all-reduce. Returns None — caller falls back to the
+    replicated ``task.eval_fn`` — when the task lacks the batched-eval
+    interface (``eval_data``/``eval_batch_fn``) or the eval prefix does
+    not divide the mesh. Metrics are allclose to, not bitwise identical
+    with, the replicated eval (reduction order differs)."""
+    if task.eval_data is None or task.eval_batch_fn is None:
+        return None
+    leaves = jax.tree.leaves(task.eval_data)
+    n_eval = leaves[0].shape[0]
+    devices = mesh.shape[axis]
+    if n_eval % devices or any(
+        getattr(a, "ndim", 0) < 1 or a.shape[0] != n_eval for a in leaves
+    ):
+        return None
+    data = jax.device_put(
+        task.eval_data, NamedSharding(mesh, P(axis))
+    )
+    fn = jax.jit(task.eval_batch_fn)
+    return lambda params: fn(params, data)
+
+
 class ShardedAsyncEngine(AsyncEngine):
     """``AsyncEngine`` with the fleet state sharded over a device mesh.
 
@@ -142,6 +178,8 @@ class ShardedAsyncEngine(AsyncEngine):
             self.fleet_axis = dist.FLEET_AXIS
             self.mesh = dist.fleet_mesh(shards, self.fleet_axis)
         self.mesh_shards = shards
+        if cfg.shard_cohort:
+            require_cohort_mesh(shards, f"mesh_shards={cfg.mesh_shards}")
         # client data is per-client state too — shard its leading axis
         data_spec = jax.tree.map(
             lambda a: NamedSharding(
@@ -155,7 +193,16 @@ class ShardedAsyncEngine(AsyncEngine):
         task = dataclasses.replace(
             task, client_data=jax.device_put(task.client_data, data_spec)
         )
+        self._sharded_eval = (
+            make_sharded_eval(task, self.mesh, self.fleet_axis)
+            if cfg.shard_cohort else None
+        )
         super().__init__(task, cfg, policy=policy, aggregator=aggregator)
+
+    def evaluate(self, state: Dict) -> Dict:
+        if self._sharded_eval is not None:
+            return self._sharded_eval(self.eval_params(state))
+        return super().evaluate(state)
 
     def _build_step(self):
         cfg = self.cfg
@@ -169,11 +216,6 @@ class ShardedAsyncEngine(AsyncEngine):
             t, idx = next_k(ev["t_done"])
             return ev_mod.apply_pop(ev, t, idx)
 
-        def replicate(tree):
-            return jax.tree.map(
-                lambda x: jax.lax.with_sharding_constraint(x, rep), tree
-            )
-
         def constrain_state(state):
             return jax.tree.map(
                 jax.lax.with_sharding_constraint,
@@ -183,9 +225,43 @@ class ShardedAsyncEngine(AsyncEngine):
                 ),
             )
 
+        if cfg.shard_cohort:
+            # cohort-parallel: (B,) intermediates lay out over the mesh —
+            # each device gathers, trains, and accumulates only its
+            # B/devices cohort slice; the aggregator merges with one psum
+            # of the accumulator pytree (allclose, not bitwise, to the
+            # replicated layout: cross-device reduction order differs)
+            cohort = NamedSharding(self.mesh, P(self.fleet_axis))
+
+            def cohort_layout(tree):
+                return jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(x, cohort),
+                    tree,
+                )
+
+            return _make_async_step(
+                self.task, cfg, self.policy, self.aggregator, self.profile,
+                pop=pop, cohort_layout=cohort_layout,
+                constrain_state=constrain_state,
+                aggregate=cohort_sharded_apply(
+                    self.aggregator, self.mesh, self.fleet_axis
+                ),
+                cohort_pad=dist.cohort_padding(
+                    cfg.resolved_buffer_size(), self.mesh_shards
+                ),
+            )
+
+        # bit-exact default: cohort-sized (B,) intermediates pinned to a
+        # replicated layout so reduction order cannot drift from the
+        # single-device engine
+        def replicate(tree):
+            return jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(x, rep), tree
+            )
+
         return _make_async_step(
             self.task, cfg, self.policy, self.aggregator, self.profile,
-            pop=pop, replicate=replicate, constrain_state=constrain_state,
+            pop=pop, cohort_layout=replicate, constrain_state=constrain_state,
         )
 
     def init(self) -> Dict:

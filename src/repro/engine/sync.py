@@ -61,7 +61,48 @@ class SyncEngine:
         self.aggregator = aggregator or make_aggregator(
             cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
         )
-        core = _make_round_core(task, cfg, self.policy, self.aggregator)
+        self._sharded_eval = None
+        if cfg.shard_cohort:
+            # cohort-parallel sync rounds: the cohort vmap (and the
+            # aggregator accumulation) partitions over a device mesh —
+            # sync has no per-client device state, so the mesh shards the
+            # *cohort* axis only. mesh_shards=0 takes every local device.
+            from repro.core import distributed as dist
+            from repro.engine.aggregators import cohort_sharded_apply
+            from repro.engine.sharded import (
+                make_sharded_eval,
+                require_cohort_mesh,
+            )
+
+            shards = cfg.mesh_shards or len(jax.devices())
+            require_cohort_mesh(shards, f"mesh_shards={cfg.mesh_shards}")
+            self.mesh = dist.fleet_mesh(shards, dist.FLEET_AXIS)
+            self.mesh_shards = shards
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            cohort = NamedSharding(self.mesh, P(dist.FLEET_AXIS))
+
+            def cohort_layout(tree):
+                return jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(x, cohort),
+                    tree,
+                )
+
+            core = _make_round_core(
+                task, cfg, self.policy, self.aggregator,
+                cohort_layout=cohort_layout,
+                # sync passes the unstacked global tree as bases
+                aggregate=cohort_sharded_apply(
+                    self.aggregator, self.mesh, dist.FLEET_AXIS,
+                    stacked_bases=False,
+                ),
+                cohort_shards=shards,
+            )
+            self._sharded_eval = make_sharded_eval(
+                task, self.mesh, dist.FLEET_AXIS
+            )
+        else:
+            core = _make_round_core(task, cfg, self.policy, self.aggregator)
 
         def scan_step(state, key):
             params, sched, selected, loss = core(state["params"], state["sched"], key)
@@ -90,6 +131,11 @@ class SyncEngine:
 
     def eval_params(self, state: Dict):
         return state["params"]
+
+    def evaluate(self, state: Dict) -> Dict:
+        if self._sharded_eval is not None:
+            return self._sharded_eval(self.eval_params(state))
+        return self.task.eval_fn(self.eval_params(state))
 
     def record(self, r: int, aux: Dict, ev: Dict) -> RoundRecord:
         return RoundRecord(
@@ -121,10 +167,28 @@ class SyncEngine:
         )
 
 
-def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator):
+def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
+                     cohort_layout=None, aggregate=None, cohort_shards: int = 1):
     """The pure per-round function (no jit): shared by the legacy per-step
-    path and the scan body of the chunked hot loop."""
+    path and the scan body of the chunked hot loop.
+
+    The optional hooks are the cohort-parallel seam (mirroring
+    ``_make_async_step``): ``cohort_layout`` lays the cohort-stacked
+    intermediates out over the mesh, ``aggregate`` replaces the inline
+    ``init/accumulate/finalize`` chain with the shard-local path, and
+    ``cohort_shards`` pads the cohort axis with weight-0 slots to the
+    next multiple of the mesh. Defaults reproduce the single-device
+    round bit-for-bit."""
+    from repro.core.distributed import cohort_padding
+
     width = cfg.cohort_width() if not policy.exact_k else cfg.k
+    cohort_pad = cohort_padding(width, cohort_shards)
+    wp = width + cohort_pad
+    if cohort_layout is None:
+        cohort_layout = lambda tree: tree  # noqa: E731
+    if aggregate is None:
+        def aggregate(g, updates, bases, w):
+            return agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
@@ -134,19 +198,27 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
         k_sel, k_local = jax.random.split(key)
         selected, sched_state = policy.step(sched_state, k_sel)
         idx, mask = cohort_indices(selected, width)
-        shards = jax.tree.map(lambda a: a[idx], task.client_data)
-        lr = lr_fn(sched_state["round"] - 1)
         keys = jax.random.split(k_local, width)
+        if cohort_pad:
+            # pad to the mesh multiple with weight-0 slots; real slots
+            # keep the exact unpadded key draws (split(k, wp) has a
+            # different prefix than split(k, width))
+            idx = jnp.concatenate([idx, jnp.zeros((cohort_pad,), idx.dtype)])
+            mask = jnp.concatenate([mask, jnp.zeros((cohort_pad,), mask.dtype)])
+            keys = keys[jnp.minimum(jnp.arange(wp), width - 1)]
+        shards = cohort_layout(jax.tree.map(lambda a: a[idx], task.client_data))
+        lr = lr_fn(sched_state["round"] - 1)
         # the cohort axis of the global params is a lazy vmap broadcast —
         # no (width, ...) copies are materialized; aggregators see the
         # unstacked global tree as ``bases`` and broadcast in their deltas
-        updated, losses = jax.vmap(local_update, in_axes=(None, 0, 0, None))(
-            params, shards, keys, lr
+        updated, losses = cohort_layout(
+            jax.vmap(local_update, in_axes=(None, 0, 0, None))(
+                params, shards, keys, lr
+            )
         )
         # sync cohorts are never stale: staleness is identically zero
         w = agg.weigh(mask > 0, jnp.zeros_like(idx))
-        acc = agg.accumulate(agg.init(params), updated, params, w)
-        params = agg.finalize(params, acc)
+        params = aggregate(params, updated, params, w)
         wsum = w.sum()
         # NaN, not a fake near-0 datapoint, when nobody was selected
         # (matching the async engine's empty-buffer convention)

@@ -29,6 +29,16 @@ class FLTask:
     eval_fn: Callable  # (params) -> dict (accuracy/loss on held-out data)
     client_data: Dict  # pytree, leading axis = n_clients
     examples_per_client: int
+    # optional batched-eval seam for cohort-parallel engines: the same
+    # metrics as ``eval_fn`` but computed from explicitly-passed held-out
+    # data (``eval_batch_fn(params, eval_data)``), so the engine can lay
+    # the eval-batch axis out over a device mesh while params stay
+    # replicated. ``eval_data``'s leading axis is the *usable* eval
+    # prefix ``eval_fn`` scores (it drops the last partial batch), so the
+    # two paths agree up to floating-point reduction order. Tasks without
+    # these fields fall back to the replicated ``eval_fn`` everywhere.
+    eval_data: Optional[Dict] = None  # pytree, leading axis = eval examples
+    eval_batch_fn: Optional[Callable] = None  # (params, eval_data) -> dict
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +89,20 @@ def make_cnn_task(
         ntot = nb * bs
         return {"accuracy": correct / ntot, "loss": loss / ntot}
 
+    n_used = max(tx.shape[0] // min(500, int(tx.shape[0])), 1) * min(
+        500, int(tx.shape[0])
+    )
+
+    def eval_batch_fn(params, data):
+        # one full-width pass: under a mesh the batch axis is sharded, so
+        # each device scores 1/devices of the prefix and the sums reduce
+        logits = cnn_mod.forward(params, data["x"])
+        logp = jax.nn.log_softmax(logits)
+        n = data["y"].shape[0]
+        loss = -jnp.take_along_axis(logp, data["y"][:, None], axis=-1).sum() / n
+        correct = (logits.argmax(-1) == data["y"]).sum()
+        return {"accuracy": correct / n, "loss": loss}
+
     return FLTask(
         name=cfg.name,
         init=lambda key: cnn_mod.init_params(key, cfg),
@@ -86,6 +110,8 @@ def make_cnn_task(
         eval_fn=eval_fn,
         client_data={"x": cx, "y": cy},
         examples_per_client=int(cx.shape[1]),
+        eval_data={"x": tx[:n_used], "y": ty[:n_used]},
+        eval_batch_fn=eval_batch_fn,
     )
 
 
@@ -127,6 +153,10 @@ def make_lm_task(
         loss = loss_fn(params, {"docs": held})
         return {"loss": loss, "accuracy": -loss}  # higher is better convention
 
+    def eval_batch_fn(params, data):
+        loss = loss_fn(params, data)
+        return {"loss": loss, "accuracy": -loss}
+
     return FLTask(
         name=f"lm:{cfg.name}",
         init=model.init,
@@ -134,4 +164,6 @@ def make_lm_task(
         eval_fn=eval_fn,
         client_data=cdata,
         examples_per_client=docs_per_client,
+        eval_data={"docs": held},
+        eval_batch_fn=eval_batch_fn,
     )

@@ -54,13 +54,6 @@ def main() -> None:
     ap.add_argument("--staleness-weight", type=float, default=0.5,
                     help="polynomial discount exponent a in (1+s)^-a; 0 = constant")
     ap.add_argument("--max-versions", type=int, default=8)
-    ap.add_argument("--mesh-shards", type=int, default=None, metavar="D",
-                    help="shard the per-client fleet state over D devices "
-                         "(ShardedAsyncEngine; D must divide --clients). "
-                         "0 auto-detects available devices; on CPU, "
-                         "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-                         "fakes an 8-device mesh. Bit-for-bit identical to "
-                         "the single-device engine for the same seed.")
     args = ap.parse_args()
 
     task = build_task(args)
@@ -73,7 +66,6 @@ def main() -> None:
         buffer_size=args.buffer_size,
         max_versions=args.max_versions,
         profile=args.latency_profile,
-        mesh_shards=args.mesh_shards,
     )
     engine = make_engine(task, cfg)
     shards = getattr(engine, "mesh_shards", None)
@@ -84,6 +76,7 @@ def main() -> None:
         f"staleness=(1+s)^-{args.staleness_weight} "
         f"chunk={cfg.resolved_steps_per_chunk()}"
         + (f" mesh_shards={shards}" if shards else "")
+        + (" cohort=sharded" if cfg.shard_cohort else "")
     )
     res = run_engine(engine, progress=True)
 

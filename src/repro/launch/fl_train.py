@@ -41,10 +41,13 @@ def main() -> None:
 
     task = build_task(args)
     cfg = build_run_config(args, mode="sync", eval_div=30)
+    engine = SyncEngine(task, cfg)
     print(f"policy={cfg.policy} n={cfg.n_clients} k={cfg.k} m={cfg.m} "
           f"rounds={cfg.rounds} aggregator={cfg.resolved_aggregator()} "
-          f"chunk={cfg.resolved_steps_per_chunk()}")
-    res = run_engine(SyncEngine(task, cfg), progress=True)
+          f"chunk={cfg.resolved_steps_per_chunk()}"
+          + (f" cohort=sharded/x{engine.mesh_shards}"
+             if cfg.shard_cohort else ""))
+    res = run_engine(engine, progress=True)
 
     stats = res.load_stats
     print("\n== load metric X ==")

@@ -1,0 +1,274 @@
+"""Cohort-parallel execution (``RunConfig.shard_cohort``) equivalence.
+
+Flag-on partitions the cohort axis over the device mesh (shard-local
+aggregator accumulation merged by one psum) instead of replicating it, so
+results are **allclose**, not bitwise, to the replicated layout: the only
+permitted difference is floating-point reduction order across cohort
+shards. The tolerance pinned here (``RTOL``/``ATOL``) is the documented
+contract of the mode — selections are still *exact* (every (n,) fleet
+draw keeps the unpadded shapes and key schedule), and ``shard_cohort=False``
+stays bit-for-bit pinned by the untouched ``tests/test_sharded_engine.py``.
+
+Equivalence runs need a real mesh: execute under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+multi-device job does); on one device only the validation tests run.
+
+Also pins the zero-dropout fast path: profiles with ``dropout == 0`` skip
+the per-step dropout fold/draw entirely, bitwise-identically to drawing a
+never-true dropout mask.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import MNIST_CNN
+from repro.core import distributed as dist
+from repro.data.synthetic import make_image_dataset
+from repro.engine import (
+    AsyncEngine,
+    RunConfig,
+    ShardedAsyncEngine,
+    SyncEngine,
+    make_engine,
+    run_engine,
+)
+from repro.engine.aggregators import cohort_sharded_apply, make_fedavg
+from repro.sim import latency as lat_mod
+
+SMALL_CNN = dataclasses.replace(
+    MNIST_CNN, name="paper-cnn-mnist-cohort", image_size=8,
+    conv_channels=(4, 8), fc_width=32,
+)
+
+N = 16
+DEVICES = jax.local_device_count()
+SHARDS = dist.resolve_fleet_shards(N, 0, DEVICES)
+needs_mesh = pytest.mark.skipif(
+    DEVICES < 2, reason="cohort sharding needs a multi-device mesh"
+)
+
+# the documented tolerance contract of shard_cohort=True: reduction order
+# across cohort shards differs, nothing else does
+RTOL, ATOL = 5e-4, 1e-5
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        "mnist-cohort", 10, 8, 1, 120, 64, seed=0, difficulty=0.8
+    )
+    return make_cnn_task(SMALL_CNN, train, test, n_clients=N)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_clients=N, k=4, m=4, policy="markov", rounds=5, local_epochs=1,
+        batch_size=5, eval_every=2, mode="async", buffer_size=3,
+        profile="mobile",
+    )
+    base.update(kw)
+    return RunConfig(**base)
+
+
+def _assert_trees_close(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), rtol=RTOL, atol=ATOL
+        )
+
+
+def _per_step(engine, rounds, n):
+    state = engine.init()
+    sel = np.zeros((rounds, n), dtype=bool)
+    losses = []
+    for r in range(rounds):
+        state, aux = engine.step(state, r)
+        sel[r] = np.asarray(aux["send"])
+        losses.append(float(aux["loss"]))
+    return state, sel, losses
+
+
+@needs_mesh
+@pytest.mark.parametrize("agg", ["fedbuff", "fedavg"])
+@pytest.mark.parametrize("policy", ["markov", "oldest_age", "round_robin"])
+def test_cohort_matches_replicated_async(small_task, policy, agg):
+    # buffer_size=3 does not divide an 8-way mesh: the padding path is
+    # exercised on the CI mesh (padded slots must never leak)
+    cfg = _cfg(policy=policy, aggregator=agg)
+    ref_state, ref_sel, ref_losses = _per_step(
+        AsyncEngine(small_task, cfg), cfg.rounds, N
+    )
+
+    ccfg = dataclasses.replace(cfg, mesh_shards=SHARDS, shard_cohort=True)
+    coh_state, coh_sel, coh_losses = _per_step(
+        ShardedAsyncEngine(small_task, ccfg), cfg.rounds, N
+    )
+    # selections are exact: every (n,) draw keeps the unpadded schedule
+    np.testing.assert_array_equal(coh_sel, ref_sel)
+    np.testing.assert_allclose(coh_losses, ref_losses, rtol=RTOL, atol=ATOL)
+    _assert_trees_close(coh_state["params"], ref_state["params"])
+    for key, val in ref_state["stats"].items():
+        np.testing.assert_allclose(
+            np.asarray(coh_state["stats"][key]), np.asarray(val),
+            rtol=RTOL, atol=ATOL, err_msg=key,
+        )
+
+    # chunked driving through run_engine (donated scan chunks + eval)
+    ref = run_engine(AsyncEngine(small_task, dataclasses.replace(
+        cfg, steps_per_chunk=5
+    )))
+    coh = run_engine(make_engine(small_task, dataclasses.replace(
+        ccfg, steps_per_chunk=5
+    )))
+    np.testing.assert_array_equal(coh.selection, ref.selection)
+    _assert_trees_close(coh.params, ref.params)
+    for rr, cr in zip(ref.records, coh.records):
+        np.testing.assert_allclose(cr.train_loss, rr.train_loss,
+                                   rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(cr.eval_loss, rr.eval_loss,
+                                   rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(cr.accuracy, rr.accuracy,
+                                   rtol=RTOL, atol=ATOL)
+    for key, val in ref.load_stats.items():
+        np.testing.assert_allclose(coh.load_stats[key], val,
+                                   rtol=RTOL, atol=ATOL, err_msg=key)
+    for key, val in ref.wall_stats.items():
+        np.testing.assert_allclose(coh.wall_stats[key], val,
+                                   rtol=RTOL, atol=ATOL, err_msg=key)
+
+
+@needs_mesh
+@pytest.mark.parametrize("agg", ["fedavg", "fedbuff"])
+def test_cohort_matches_plain_sync(small_task, agg):
+    cfg = _cfg(mode="sync", buffer_size=None, profile="lognormal",
+               aggregator=agg)
+    ref = run_engine(SyncEngine(small_task, cfg))
+    coh = run_engine(make_engine(small_task, dataclasses.replace(
+        cfg, mesh_shards=0, shard_cohort=True
+    )))
+    np.testing.assert_array_equal(coh.selection, ref.selection)
+    _assert_trees_close(coh.params, ref.params)
+    for rr, cr in zip(ref.records, coh.records):
+        np.testing.assert_allclose(cr.train_loss, rr.train_loss,
+                                   rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(cr.eval_loss, rr.eval_loss,
+                                   rtol=RTOL, atol=ATOL)
+    for key, val in ref.load_stats.items():
+        np.testing.assert_allclose(coh.load_stats[key], val,
+                                   rtol=RTOL, atol=ATOL, err_msg=key)
+
+
+@needs_mesh
+def test_cohort_eval_is_sharded(small_task):
+    eng = make_engine(
+        small_task, _cfg(mesh_shards=SHARDS, shard_cohort=True)
+    )
+    # the 64-example eval prefix divides the mesh: the sharded eval path
+    # must actually engage (no silent fallback to replicated eval)
+    assert eng._sharded_eval is not None
+    state = eng.init()
+    got = {k: float(v) for k, v in eng.evaluate(state).items()}
+    want = {k: float(v) for k, v in
+            small_task.eval_fn(state["params"]).items()}
+    assert set(got) == set(want)
+    for key, val in want.items():
+        np.testing.assert_allclose(got[key], val, rtol=RTOL, atol=ATOL,
+                                   err_msg=key)
+
+
+@needs_mesh
+def test_sharded_eval_fallbacks(small_task):
+    from repro.engine.sharded import make_sharded_eval
+
+    mesh = dist.fleet_mesh(SHARDS)
+    assert make_sharded_eval(small_task, mesh, dist.FLEET_AXIS) is not None
+    # no batched-eval interface -> replicated fallback
+    bare = dataclasses.replace(small_task, eval_batch_fn=None)
+    assert make_sharded_eval(bare, mesh, dist.FLEET_AXIS) is None
+    # eval prefix not divisible by the mesh -> replicated fallback
+    ragged = dataclasses.replace(
+        small_task,
+        eval_data=jax.tree.map(lambda a: a[: SHARDS + 1],
+                               small_task.eval_data),
+    )
+    assert make_sharded_eval(ragged, mesh, dist.FLEET_AXIS) is None
+
+
+@needs_mesh
+def test_cohort_sharded_apply_matches_inline():
+    agg = make_fedavg()
+    mesh = dist.fleet_mesh(SHARDS)
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (3, 4)), "b": jnp.zeros((4,))}
+    B = 2 * SHARDS
+    updates = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 1),
+                                    (B,) + p.shape), g
+    )
+    bases = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 2),
+                                    (B,) + p.shape), g
+    )
+    w = jnp.asarray([1.0, 0.0] * SHARDS)
+    inline = agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
+    sharded = cohort_sharded_apply(agg, mesh, dist.FLEET_AXIS)(
+        g, updates, bases, w
+    )
+    _assert_trees_close(sharded, inline)
+
+
+def test_cohort_sharded_apply_rejects_non_additive():
+    agg = dataclasses.replace(make_fedavg(), additive=False)
+    mesh = dist.fleet_mesh(1)
+    with pytest.raises(ValueError, match="not additive"):
+        cohort_sharded_apply(agg, mesh, dist.FLEET_AXIS)
+
+
+def test_shard_cohort_validation(small_task):
+    # config level: no mesh at all would be a silent no-op
+    with pytest.raises(ValueError, match="shard_cohort.*mesh"):
+        _cfg(shard_cohort=True)
+    # sync + mesh_shards is only meaningful with shard_cohort
+    with pytest.raises(ValueError, match="shard_cohort"):
+        RunConfig(mode="sync", mesh_shards=2)
+    # engine level: a 1-device mesh is not a cohort mesh, regardless of
+    # how many devices the host has
+    with pytest.raises(ValueError, match=">= 2 devices"):
+        make_engine(small_task, _cfg(mesh_shards=1, shard_cohort=True))
+    with pytest.raises(ValueError, match=">= 2 devices"):
+        make_engine(small_task, _cfg(
+            mode="sync", buffer_size=None, profile="lognormal",
+            mesh_shards=1, shard_cohort=True,
+        ))
+
+
+def test_cohort_padding():
+    assert dist.cohort_padding(3, 8) == 5
+    assert dist.cohort_padding(8, 8) == 0
+    assert dist.cohort_padding(9, 8) == 7
+    assert dist.cohort_padding(5, 1) == 0
+    with pytest.raises(ValueError, match=">= 1"):
+        dist.cohort_padding(3, 0)
+
+
+@pytest.mark.parametrize("profile_name", ["lognormal", "uniform"])
+def test_zero_dropout_skips_draw_unchanged(small_task, profile_name):
+    """Zero-dropout profiles skip the per-step dropout fold/draw; results
+    must be bitwise identical to a profile whose dropout draw runs but
+    never fires (the 102 fold feeds nothing else)."""
+    base = lat_mod.get_profile(profile_name)
+    assert base.dropout == 0.0
+    never = dataclasses.replace(base, dropout=1e-30)
+    res0 = run_engine(AsyncEngine(small_task, _cfg(profile=base, rounds=4)))
+    res1 = run_engine(AsyncEngine(small_task, _cfg(profile=never, rounds=4)))
+    np.testing.assert_array_equal(res0.selection, res1.selection)
+    for la, lb in zip(jax.tree.leaves(res0.params),
+                      jax.tree.leaves(res1.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for rr, cr in zip(res0.records, res1.records):
+        np.testing.assert_array_equal(cr.train_loss, rr.train_loss)
