@@ -546,6 +546,72 @@ def run_cohort(csv_rows, trials: int = 3):
     ))
 
 
+def run_topo(csv_rows, trials: int = 3):
+    """Topology-aware aggregation (``repro.topo``): the 2-tier
+    hierarchical reduction (edge -> regional -> global) on the real
+    async engine vs the flat star, single device and with the fleet
+    state sharded over every local device. The tiered path segment-sums
+    per-node aggregator accumulators up the tree and still merges
+    cross-device with the one-psum pattern, so the decisive check is
+    that the hierarchy's cost is a small constant over the star — the
+    per-tier Var[X] telemetry and per-hop latency ride along in the
+    same donated scan."""
+    import dataclasses as dc
+
+    from repro.core import distributed as dist
+    from repro.engine import AsyncEngine, RunConfig, make_engine
+
+    n_devs = jax.local_device_count()
+    print("\n== hierarchical aggregation topology: 2-tier vs star ==")
+    if n_devs < 2:
+        print("  [single device: set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 for the "
+              "sharded topology comparison; skipping]")
+        return
+    chunk = 8
+    n = 262_144
+    k = max(int(n * 0.15), 1)
+    buf = min(max(n // 100, 16), 4096)
+    D = dist.resolve_fleet_shards(n, 0, n_devs)
+    tiers = (64, 8)
+    task = _mlp_task(n)
+    base = RunConfig(
+        n_clients=n, k=k, m=10, policy="markov", rounds=4 * chunk,
+        local_epochs=1, batch_size=2, mode="async", buffer_size=buf,
+        profile="lognormal", steps_per_chunk=chunk, collect_history=False,
+        rng_impl=FAST_RNG, eval_every=4 * chunk,
+    )
+    hcfg = dc.replace(base, topology="hierarchical",
+                      topology_kwargs={"tiers": tiers})
+    star = AsyncEngine(task, base)
+    hier = AsyncEngine(task, hcfg)
+    shard = make_engine(task, dc.replace(hcfg, mesh_shards=0))
+    (star_us, hier_us, shard_us), snaps = _time_engine_chunks(
+        [star, hier, shard], chunk, trials
+    )
+    # the per-tier load telemetry must have accumulated device-resident
+    tier_stats = lm.tier_stats_from_accum(snaps[1]["tier_acc"])
+    nodes = len(tier_stats["tier_var_X"])
+    samples = int(sum(tier_stats["tier_num_samples"]))
+    tag = "x".join(str(t) for t in tiers)
+    print(f"  async n={n:>9,} buffer={buf} tiers={tiers}: star "
+          f"{star_us / 1e3:8.2f} ms/step | hier {hier_us / 1e3:8.2f} ms/step "
+          f"({hier_us / star_us:.2f}x) | hier sharded x{D} "
+          f"{shard_us / 1e3:8.2f} ms/step "
+          f"[{nodes} tier-0 nodes, {samples:,} gap samples]")
+    csv_rows.append((
+        f"async_engine_step_n{n}_hier{tag}", hier_us,
+        f"buffer={buf};tiers={tag};star_us={star_us:.1f};"
+        f"overhead_vs_star={hier_us / star_us:.2f}x;"
+        f"tier0_nodes={nodes};tier_gap_samples={samples}",
+    ))
+    csv_rows.append((
+        f"async_engine_step_n{n}_hier{tag}_sharded{D}", shard_us,
+        f"buffer={buf};tiers={tag};singledev_us={hier_us:.1f};"
+        f"star_us={star_us:.1f}",
+    ))
+
+
 def run(csv_rows, rounds: int = 12):
     print("\n== async engine hot loop: per-step+pull vs chunked scan ==")
     m = 10

@@ -22,12 +22,28 @@ import sys
 import time
 
 
+# rows every committed baseline must carry, whatever --only subset is
+# being checked: renaming or dropping one of these must fail the gate
+# loudly instead of silently shrinking coverage. The hierarchical rows
+# come from bench_async_fleet.run_topo on 8 fake devices.
+REQUIRED_BASELINE_ROWS = (
+    "async_engine_step_n262144_hier64x8",
+    "async_engine_step_n262144_hier64x8_sharded8",
+)
+
+
 def check_against_baseline(csv_rows, baseline_path: str, rtol: float) -> int:
     """Compare timed rows to a committed baseline; returns the number of
     regressions (rows slower than baseline * (1 + rtol))."""
     with open(baseline_path) as f:
         payload = json.load(f)
     base = {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+    absent = [name for name in REQUIRED_BASELINE_ROWS if name not in base]
+    if absent:
+        print(f"FAIL: baseline {baseline_path} is missing required row(s): "
+              f"{', '.join(absent)} (refresh it with --out after running "
+              f"the topo section on 8 fake devices)")
+        return len(absent)
     regressions, faster, missing = [], [], []
     compared = 0
     print(f"\n== regression check vs {baseline_path} (rtol={rtol}) ==")
@@ -71,7 +87,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: variance,scheduler,kernels,convergence,"
-                         "roofline,async,sharded")
+                         "roofline,async,sharded,topo")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--out", default=None,
@@ -119,6 +135,10 @@ def main() -> None:
 
         bench_async_fleet.run_sharded(csv_rows)
         bench_async_fleet.run_cohort(csv_rows)
+    if on("topo"):
+        from benchmarks import bench_async_fleet
+
+        bench_async_fleet.run_topo(csv_rows)
     if on("roofline"):
         from benchmarks import bench_roofline
 

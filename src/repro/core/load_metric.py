@@ -307,3 +307,86 @@ def selection_stats_from_accum(acc) -> dict:
         "min_cohort": min_c,
         "max_cohort": max_c,
     }
+
+
+# ---------------------------------------------------------------------------
+# Per-tier accumulators: the same X moments, grouped by aggregation node
+# ---------------------------------------------------------------------------
+#
+# Under a multi-tier topology (repro.topo) the fleet-wide Var[X] hides
+# imbalance *between* tiers: a region of stragglers can run a load
+# distribution nothing like the fleet's. The grouped accumulator keeps
+# the selection-gap moments per tier-0 node — (E,) vectors instead of
+# scalars, segment-summed from the same per-client gap increments, with
+# the identical Kahan compensation (the per-node sums face the same
+# billions-of-steps growth the fleet-wide sums do).
+
+_TIER_MOMENTS = ("gap_sum", "gap_sumsq", "gap_cnt")
+
+
+def init_tier_accum(n: int, n_groups: int):
+    """Fresh per-tier gap accumulator: ``n`` clients over ``n_groups``
+    tier-0 aggregation nodes."""
+    import jax.numpy as jnp
+
+    z = jnp.zeros((n_groups,), jnp.float32)
+    acc = {
+        "last_sel": jnp.full((n,), -1, jnp.int32),
+        "steps": jnp.zeros((), jnp.int32),
+    }
+    for name in _TIER_MOMENTS:
+        acc[name] = z
+        acc["c_" + name] = z
+    return acc
+
+
+def update_tier_accum(acc, selected, group_of_client):
+    """Fold one round's (n,) bool selection into the per-tier moments;
+    ``group_of_client`` is the static (n,) int32 client -> tier-0 node
+    map from ``Topology.assign``."""
+    import jax.numpy as jnp
+    from jax.ops import segment_sum
+
+    e = acc["gap_sum"].shape[0]
+    r = acc["steps"]
+    has_gap = selected & (acc["last_sel"] >= 0)
+    gap = jnp.where(has_gap, r - acc["last_sel"], 0).astype(jnp.float32)
+    increments = {
+        "gap_sum": segment_sum(gap, group_of_client, num_segments=e),
+        "gap_sumsq": segment_sum(gap * gap, group_of_client, num_segments=e),
+        "gap_cnt": segment_sum(
+            has_gap.astype(jnp.float32), group_of_client, num_segments=e
+        ),
+    }
+    out = {
+        "last_sel": jnp.where(selected, r, acc["last_sel"]),
+        "steps": r + 1,
+    }
+    for name, inc in increments.items():
+        out[name], out["c_" + name] = _kahan_add(
+            acc[name], acc["c_" + name], inc
+        )
+    return out
+
+
+def tier_stats_from_accum(acc) -> dict:
+    """Per-tier-node mean/var of X as plain lists (JSON-safe), NaN where
+    a node has no gap samples yet."""
+    a = {
+        name: np.asarray(acc[name], np.float64)
+        - np.asarray(acc["c_" + name], np.float64)
+        for name in _TIER_MOMENTS
+    }
+    cnt = a["gap_cnt"]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        mean = np.where(cnt > 0, a["gap_sum"] / cnt, np.nan)
+        var = np.where(
+            cnt > 0,
+            np.maximum(a["gap_sumsq"] / np.maximum(cnt, 1.0) - mean * mean, 0.0),
+            np.nan,
+        )
+    return {
+        "tier_num_samples": [int(c) for c in cnt],
+        "tier_mean_X": [float(v) for v in mean],
+        "tier_var_X": [float(v) for v in var],
+    }

@@ -95,7 +95,10 @@ def cohort_sharded_apply(
         )
     spec = P(axis)
 
-    def apply(g, updates, bases, w):
+    def apply(g, updates, bases, w, idx=None):
+        # ``idx`` (the cohort -> client map) is part of the engines'
+        # aggregate-hook signature for topology-aware reductions; the
+        # star-shaped single-server reduction has no use for it
         def local(g_l, u_l, b_l, w_l):
             acc = agg.accumulate(agg.init(g_l), u_l, b_l, w_l)
             return jax.lax.psum(acc, axis)

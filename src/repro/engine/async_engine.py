@@ -36,6 +36,7 @@ from repro.core.load_metric import (
     empirical_load_stats,
     init_selection_accum,
     selection_stats_from_accum,
+    tier_stats_from_accum,
 )
 from repro.core.selection import Policy
 from repro.engine.aggregators import Aggregator
@@ -55,9 +56,9 @@ def _resolved_profile(profile) -> lat_mod.LatencyProfile:
     return lat_mod.get_profile(profile)
 
 
-def _init_stats() -> Dict[str, jnp.ndarray]:
+def _init_stats(heartbeat: bool = False) -> Dict[str, jnp.ndarray]:
     z = jnp.zeros((), jnp.float32)
-    return {
+    out = {
         "wall_sx": z, "wall_sx2": z, "wall_cnt": z,  # X in simulated seconds
         "ep_sx": z, "ep_sx2": z, "ep_cnt": z,  # X in decision epochs
         "stale_sum": z, "stale_cnt": z,
@@ -65,6 +66,9 @@ def _init_stats() -> Dict[str, jnp.ndarray]:
         "updates": z,  # successful updates aggregated
         "aggs": z,  # server versions produced
     }
+    if heartbeat:
+        out["hb_expired"] = z  # updates excluded by heartbeat churn
+    return out
 
 
 class AsyncEngine:
@@ -89,6 +93,7 @@ class AsyncEngine:
             cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
         )
         self.profile = _resolved_profile(cfg.profile)
+        self.topo = cfg.resolved_topology()
         self._init_state, core = self._build_step()
         self._chunk = ChunkRunner(
             core, aux_keys=("loss", "clock", "version", "buffer_fill")
@@ -98,7 +103,8 @@ class AsyncEngine:
         """Step-builder hook: ``ShardedAsyncEngine`` overrides this to
         inject the mesh-sharded pop and sharding constraints."""
         return _make_async_step(
-            self.task, self.cfg, self.policy, self.aggregator, self.profile
+            self.task, self.cfg, self.policy, self.aggregator, self.profile,
+            topo=self.topo,
         )
 
     def init(self) -> Dict:
@@ -140,9 +146,14 @@ class AsyncEngine:
             buffer_fill=int(aux["buffer_fill"]),
         )
 
+    def _topo_tag(self) -> str:
+        if self.topo is None or self.topo.is_star:
+            return ""
+        return f"/{self.topo.describe()}"
+
     def progress_line(self, rec: RoundRecord, elapsed: float) -> str:
         return (
-            f"  [{self.policy.name}/{self.profile.name}] "
+            f"  [{self.policy.name}/{self.profile.name}{self._topo_tag()}] "
             f"step {rec.round:4d} t={rec.clock:9.2f}s v={rec.version:4d} "
             f"acc={rec.accuracy:.4f} loss={rec.eval_loss:.4f} ({elapsed:.1f}s)"
         )
@@ -169,10 +180,15 @@ class AsyncEngine:
             "aggregations": int(st["aggs"]),
             "sim_time": float(state["clock"]),
         }
+        if "hb_expired" in st:
+            wall_stats["hb_expired"] = int(st["hb_expired"])
         if sel_hist is not None:
             load_stats = empirical_load_stats(sel_hist)
         else:
             load_stats = selection_stats_from_accum(state["load_acc"])
+        if "tier_acc" in state:
+            load_stats = dict(load_stats)
+            load_stats.update(tier_stats_from_accum(state["tier_acc"]))
         return RunResult(
             config=self.cfg,
             records=records,
@@ -188,7 +204,7 @@ def _make_async_step(
     task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
     profile: lat_mod.LatencyProfile,
     pop=None, cohort_layout=None, constrain_state=None,
-    aggregate=None, cohort_pad: int = 0,
+    aggregate=None, cohort_pad: int = 0, topo=None,
 ):
     """Builds ``(init_state, step core)`` with ``step(state, key) ->
     (state, aux)`` — the pure function the chunked scan body folds over
@@ -205,20 +221,41 @@ def _make_async_step(
         cohort-parallel mode (``RunConfig.shard_cohort``) lays them out
         ``P(fleet)`` instead so each device trains only its slice of the
         cohort;
-      * ``aggregate(params, updates, bases, w) -> params`` replaces the
-        inline ``init/accumulate/finalize`` chain (the cohort-parallel
+      * ``aggregate(params, updates, bases, w, idx) -> params`` replaces
+        the inline ``init/accumulate/finalize`` chain (the cohort-parallel
         mode routes it through ``aggregators.cohort_sharded_apply``:
-        shard-local accumulation merged by one psum);
+        shard-local accumulation merged by one psum; ``idx`` is the
+        cohort -> client map, which topology-aware reductions use to
+        route each slot to its tier-0 node);
       * ``cohort_pad`` appends that many zero-weight slots to the popped
         cohort so the padded axis divides the mesh (invalid slots, masked
         everywhere exactly like an under-filled buffer);
       * ``constrain_state(state)`` re-asserts the fleet sharding of the
         carry so the donated scan aliases buffers instead of resharding.
+
+    ``topo`` (a ``repro.topo.Topology``) reshapes the aggregation: the
+    default aggregate becomes the tiered reduction, every dispatch pays
+    the per-hop DAG latency under a dedicated key fold, the per-tier
+    load accumulators ride the state, and a non-zero
+    ``heartbeat_timeout`` excludes dark clients from their tier's
+    reduction. A star (or ``topo=None``) leaves every code path — state
+    keys, key folds, ops — untouched, so the degenerate case is
+    structurally bit-for-bit identical (pinned by ``tests/test_topo.py``).
     """
     n = cfg.n_clients
     B = cfg.resolved_buffer_size()
     Bp = B + cohort_pad
     H = cfg.max_versions
+    tiered = topo is not None and not topo.is_star
+    hb_timeout = float(topo.heartbeat_timeout) if topo is not None else 0.0
+    if tiered:
+        from repro.core.load_metric import init_tier_accum, update_tier_accum
+        from repro.topo.reduce import make_hop_latency, tiered_apply
+
+        assign_dev = jnp.asarray(topo.assign(n))
+        hop_fn = make_hop_latency(topo, n)
+    if hb_timeout > 0:
+        from repro.topo import heartbeat as hb_mod
     if pop is None:
         def pop(ev):
             return ev_mod.pop_events(ev, B, use_kernel=cfg.use_kernel)
@@ -227,15 +264,20 @@ def _make_async_step(
     if constrain_state is None:
         constrain_state = lambda state: state  # noqa: E731
     if aggregate is None:
-        def aggregate(g, updates, bases, w):
-            return agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
+        if tiered:
+            aggregate = tiered_apply(agg, topo, n)
+        else:
+            def aggregate(g, updates, bases, w, idx=None):
+                return agg.finalize(
+                    g, agg.accumulate(agg.init(g), updates, bases, w)
+                )
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
     lr_fn = exponential_decay(cfg.lr0, cfg.lr_decay)
 
     def init_state(params, sched_state, key):
-        return {
+        state = {
             "params": params,
             # ring buffer of the last H global models; slot v % H = version v
             "hist": jax.tree.map(
@@ -246,8 +288,13 @@ def _make_async_step(
             "speed": lat_mod.client_speed(key, n, profile),
             "clock": jnp.zeros((), jnp.float32),
             "version": jnp.zeros((), jnp.int32),
-            "stats": _init_stats(),
+            "stats": _init_stats(heartbeat=hb_timeout > 0),
         }
+        if hb_timeout > 0:
+            state["hb"] = hb_mod.init_heartbeat(n)
+        if tiered:
+            state["tier_acc"] = init_tier_accum(n, int(topo.tier_sizes[0]))
+        return state
 
     def step(state, key):
         ev, sched, stats = state["ev"], state["sched"], state["stats"]
@@ -277,6 +324,14 @@ def _make_async_step(
         # key depends on the 102 fold, so results are unchanged — pinned
         # by tests/test_cohort_engine.py
         latency = lat_mod.sample_latency(k_lat, profile, state["speed"])
+        if tiered:
+            # fold 104: per-hop DAG latency. Only drawn when a multi-tier
+            # topology is armed, so the star key schedule is untouched
+            latency = latency + hop_fn(jax.random.fold_in(k_sel, 104))
+        if hb_timeout > 0:
+            # dispatch is a heartbeat: the client pulled the model at
+            # the current clock
+            hb = hb_mod.beat(state["hb"], send, clock)
         if profile.dropout > 0:
             dropped = lat_mod.sample_dropout(
                 jax.random.fold_in(k_sel, 102), profile, n
@@ -330,12 +385,22 @@ def _make_async_step(
 
         # --- buffered aggregation of deltas through the aggregator seam
         succ = valid & ~ev["dropped"][idx]
+        if hb_timeout > 0:
+            # an update landing more than the timeout after its client's
+            # last contact looks dead to its tier coordinator: excluded
+            # from the reduction exactly like a dropped slot. All valid
+            # completions still count as contact (the client did return)
+            dark = succ & hb_mod.expired(
+                hb["last_beat"][idx], t_ev, hb_timeout
+            )
+            succ = succ & ~dark
+            hb = hb_mod.beat_at(hb, ev_mod.scatter_idx(idx, valid), t_ev)
         staleness = jnp.maximum(version - disp_ver, 0)
         w = agg.weigh(succ, staleness)
         wsum = w.sum()
         has = wsum > 0
         denom = jnp.maximum(wsum, 1e-9)
-        params = aggregate(state["params"], updated, disp_params, w)
+        params = aggregate(state["params"], updated, disp_params, w, idx)
         version = version + has.astype(jnp.int32)
         hist = jax.tree.map(
             lambda h, p: h.at[version % H].set(p), state["hist"], params
@@ -381,11 +446,22 @@ def _make_async_step(
             "updates": stats["updates"] + succ.astype(jnp.float32).sum(),
             "aggs": stats["aggs"] + has.astype(jnp.float32),
         }
-        state = constrain_state({
+        if hb_timeout > 0:
+            stats["hb_expired"] = (
+                state["stats"]["hb_expired"] + dark.astype(jnp.float32).sum()
+            )
+        new_state = {
             **state,
             "params": params, "hist": hist, "sched": sched, "ev": ev,
             "clock": new_clock, "version": version, "stats": stats,
-        })
+        }
+        if hb_timeout > 0:
+            new_state["hb"] = hb
+        if tiered:
+            new_state["tier_acc"] = update_tier_accum(
+                state["tier_acc"], send, assign_dev
+            )
+        state = constrain_state(new_state)
         aux = {
             "send": send,
             "loss": mean_loss,

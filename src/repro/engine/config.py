@@ -84,6 +84,19 @@ class RunConfig:
     # meaningful together with ``shard_cohort`` (the mesh then shards the
     # cohort axis; sync has no per-client device state).
     mesh_shards: Optional[int] = None
+    # --- aggregation topology (repro.topo) ---
+    # None / "star" -> today's single-server reduction, bit-for-bit
+    # unchanged. A registered topology name ("hierarchical", "gossip",
+    # or anything added via @register_topology) or a ready
+    # ``repro.topo.Topology`` instance routes the aggregation through
+    # the tiered reduction (additive aggregators only), prices each
+    # cross-tier hop with a sim.latency profile, and — when the topology
+    # arms ``heartbeat_timeout`` — excludes clients that went dark from
+    # their tier's reduction (async engine; the sync engine has no
+    # mid-round clock and rejects a heartbeat).
+    topology: Any = None
+    topology_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
     # cohort-parallel execution: partition the popped cohort (async) /
     # the round's cohort vmap (sync) across the device mesh instead of
     # replicating it, with shard-local aggregator accumulation merged by
@@ -143,6 +156,14 @@ class RunConfig:
                 "(0 = auto-detect) — without one the cohort would silently "
                 "stay replicated"
             )
+        if self.topology is not None:
+            # resolve eagerly so a typo'd name or an invalid tier shape
+            # fails at config construction, not mid-run inside jit
+            self.resolved_topology()
+        elif self.topology_kwargs:
+            raise ValueError(
+                "topology_kwargs given without a topology name"
+            )
 
     def cohort_width(self) -> int:
         """Padded cohort buffer width for variable-size policies."""
@@ -165,6 +186,31 @@ class RunConfig:
 
     def profile_name(self) -> str:
         return self.profile if isinstance(self.profile, str) else self.profile.name
+
+    def resolved_topology(self):
+        """The ``repro.topo.Topology`` this run aggregates through, or
+        None for the default star. The import is lazy (``repro.topo.graph``
+        is numpy-only, like this module) and the topology is validated
+        against ``n_clients``."""
+        if self.topology is None:
+            return None
+        from repro.topo.graph import Topology, make_topology
+
+        if isinstance(self.topology, Topology):
+            topo = self.topology
+            if self.topology_kwargs:
+                raise ValueError(
+                    "topology_kwargs only apply to registry names; got a "
+                    "ready Topology instance"
+                )
+        else:
+            topo = make_topology(self.topology, **dict(self.topology_kwargs))
+        topo.validate(self.n_clients)
+        return topo
+
+    def topology_name(self) -> str:
+        topo = self.resolved_topology()
+        return "star" if topo is None else topo.describe()
 
 
 def chunk_plan(rounds: int, eval_every: int, steps_per_chunk: int):

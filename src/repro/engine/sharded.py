@@ -63,22 +63,27 @@ from repro.fl.task import FLTask
 from repro.sim import events as ev_mod
 
 # state entries whose leading-``n`` leaves shard over the fleet axis
-FLEET_STATE_KEYS = ("ev", "sched", "speed", "load_acc")
+# ("hb" heartbeats and the "tier_acc" per-client last-selection vector
+# are (n,)-leading too; their (E,) per-tier moments stay replicated via
+# the shape[0] == n check in fleet_state_sharding)
+FLEET_STATE_KEYS = ("ev", "sched", "speed", "load_acc", "hb", "tier_acc")
 
 
 def per_device_state_bytes(state, dev) -> int:
     """Measured bytes of a state pytree resident on device ``dev`` — the
     sharded-vs-single-device footprint the benchmarks and the engine's
-    accounting report. Typed PRNG key arrays hide their buffer
-    (``nbytes`` raises); they are counted as 0, which is negligible."""
+    accounting report. Typed PRNG key arrays hide their buffer (their
+    ``nbytes`` is not exposed); they are probed for explicitly and
+    counted as 0, which is negligible — any other failure to read a
+    shard's size is a real bug and raises."""
     total = 0
     for leaf in jax.tree.leaves(state):
+        dt = getattr(leaf, "dtype", None)
+        if dt is not None and jax.dtypes.issubdtype(dt, jax.dtypes.prng_key):
+            continue
         for shard in getattr(leaf, "addressable_shards", []):
             if shard.device == dev:
-                try:
-                    total += shard.data.nbytes
-                except (NotImplementedError, AttributeError):
-                    pass
+                total += shard.data.nbytes
     return total
 
 
@@ -239,16 +244,29 @@ class ShardedAsyncEngine(AsyncEngine):
                     tree,
                 )
 
+            if self.topo is not None and not self.topo.is_star:
+                # the tiered reduction in cohort-parallel form: slot
+                # accumulation + the tier-0 segment sum run shard-locally
+                # inside the same shard_map-and-one-psum pattern
+                from repro.topo.reduce import tiered_apply
+
+                aggregate = tiered_apply(
+                    self.aggregator, self.topo, cfg.n_clients,
+                    mesh=self.mesh, axis=self.fleet_axis,
+                )
+            else:
+                aggregate = cohort_sharded_apply(
+                    self.aggregator, self.mesh, self.fleet_axis
+                )
             return _make_async_step(
                 self.task, cfg, self.policy, self.aggregator, self.profile,
                 pop=pop, cohort_layout=cohort_layout,
                 constrain_state=constrain_state,
-                aggregate=cohort_sharded_apply(
-                    self.aggregator, self.mesh, self.fleet_axis
-                ),
+                aggregate=aggregate,
                 cohort_pad=dist.cohort_padding(
                     cfg.resolved_buffer_size(), self.mesh_shards
                 ),
+                topo=self.topo,
             )
 
         # bit-exact default: cohort-sized (B,) intermediates pinned to a
@@ -262,6 +280,7 @@ class ShardedAsyncEngine(AsyncEngine):
         return _make_async_step(
             self.task, cfg, self.policy, self.aggregator, self.profile,
             pop=pop, cohort_layout=replicate, constrain_state=constrain_state,
+            topo=self.topo,
         )
 
     def init(self) -> Dict:

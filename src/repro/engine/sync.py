@@ -27,7 +27,10 @@ import jax.numpy as jnp
 from repro.core.load_metric import (
     empirical_load_stats,
     init_selection_accum,
+    init_tier_accum,
     selection_stats_from_accum,
+    tier_stats_from_accum,
+    update_tier_accum,
 )
 from repro.core.selection import Policy
 from repro.engine.aggregators import Aggregator
@@ -61,6 +64,18 @@ class SyncEngine:
         self.aggregator = aggregator or make_aggregator(
             cfg.resolved_aggregator(), **dict(cfg.aggregator_kwargs)
         )
+        self.topo = cfg.resolved_topology()
+        if self.topo is not None and self.topo.heartbeat_timeout > 0:
+            raise ValueError(
+                "heartbeat churn is wall-clock-based and needs the async "
+                "engine's event clock; sync rounds have no mid-round time "
+                "for a client to go dark in — drop heartbeat_timeout or "
+                "use mode='async'"
+            )
+        tiered = self.topo is not None and not self.topo.is_star
+        self._assign = (
+            jnp.asarray(self.topo.assign(cfg.n_clients)) if tiered else None
+        )
         self._sharded_eval = None
         if cfg.shard_cohort:
             # cohort-parallel sync rounds: the cohort vmap (and the
@@ -88,25 +103,55 @@ class SyncEngine:
                     tree,
                 )
 
+            if tiered:
+                # the tiered reduction under the sharded cohort: slot
+                # accumulation + the tier-0 segment sum run shard-locally
+                # and merge with the same one-psum pattern
+                from repro.topo.reduce import tiered_apply
+
+                aggregate = tiered_apply(
+                    self.aggregator, self.topo, cfg.n_clients,
+                    mesh=self.mesh, axis=dist.FLEET_AXIS,
+                    stacked_bases=False,
+                )
+            else:
+                # sync passes the unstacked global tree as bases
+                aggregate = cohort_sharded_apply(
+                    self.aggregator, self.mesh, dist.FLEET_AXIS,
+                    stacked_bases=False,
+                )
             core = _make_round_core(
                 task, cfg, self.policy, self.aggregator,
                 cohort_layout=cohort_layout,
-                # sync passes the unstacked global tree as bases
-                aggregate=cohort_sharded_apply(
-                    self.aggregator, self.mesh, dist.FLEET_AXIS,
-                    stacked_bases=False,
-                ),
+                aggregate=aggregate,
                 cohort_shards=shards,
             )
             self._sharded_eval = make_sharded_eval(
                 task, self.mesh, dist.FLEET_AXIS
             )
+        elif tiered:
+            from repro.topo.reduce import tiered_apply
+
+            core = _make_round_core(
+                task, cfg, self.policy, self.aggregator,
+                aggregate=tiered_apply(
+                    self.aggregator, self.topo, cfg.n_clients,
+                    stacked_bases=False,
+                ),
+            )
         else:
             core = _make_round_core(task, cfg, self.policy, self.aggregator)
 
+        assign = self._assign
+
         def scan_step(state, key):
             params, sched, selected, loss = core(state["params"], state["sched"], key)
-            return {"params": params, "sched": sched}, {"send": selected, "loss": loss}
+            out = {"params": params, "sched": sched}
+            if assign is not None:
+                out["tier_acc"] = update_tier_accum(
+                    state["tier_acc"], selected, assign
+                )
+            return out, {"send": selected, "loss": loss}
 
         self._chunk = ChunkRunner(scan_step, aux_keys=("loss",))
 
@@ -116,12 +161,17 @@ class SyncEngine:
         k_init, k_policy, k_run = jax.random.split(key, 3)
         # donation-safe from the start: step() routes through the donated
         # chunk runner even for single steps
-        return dealias_pytree({
+        state = {
             "params": self.task.init(k_init),
             "sched": self.policy.init(k_policy, cfg.n_clients),
             "k_run": k_run,
             "load_acc": init_selection_accum(cfg.n_clients, cfg.k),
-        })
+        }
+        if self._assign is not None:
+            state["tier_acc"] = init_tier_accum(
+                cfg.n_clients, int(self.topo.tier_sizes[0])
+            )
+        return dealias_pytree(state)
 
     def step(self, state: Dict, r: int):
         return step_once(self._chunk, state, r)
@@ -146,8 +196,12 @@ class SyncEngine:
         )
 
     def progress_line(self, rec: RoundRecord, elapsed: float) -> str:
+        tag = (
+            f"/{self.topo.describe()}"
+            if self.topo is not None and not self.topo.is_star else ""
+        )
         return (
-            f"  [{self.policy.name}] round {rec.round:4d} "
+            f"  [{self.policy.name}{tag}] round {rec.round:4d} "
             f"acc={rec.accuracy:.4f} loss={rec.eval_loss:.4f} ({elapsed:.1f}s)"
         )
 
@@ -156,6 +210,9 @@ class SyncEngine:
             load_stats = empirical_load_stats(sel_hist)
         else:
             load_stats = selection_stats_from_accum(state["load_acc"])
+        if "tier_acc" in state:
+            load_stats = dict(load_stats)
+            load_stats.update(tier_stats_from_accum(state["tier_acc"]))
         return RunResult(
             config=self.cfg,
             records=records,
@@ -187,7 +244,7 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
     if cohort_layout is None:
         cohort_layout = lambda tree: tree  # noqa: E731
     if aggregate is None:
-        def aggregate(g, updates, bases, w):
+        def aggregate(g, updates, bases, w, idx=None):
             return agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
@@ -218,7 +275,7 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
         )
         # sync cohorts are never stale: staleness is identically zero
         w = agg.weigh(mask > 0, jnp.zeros_like(idx))
-        params = aggregate(params, updated, params, w)
+        params = aggregate(params, updated, params, w, idx)
         wsum = w.sum()
         # NaN, not a fake near-0 datapoint, when nobody was selected
         # (matching the async engine's empty-buffer convention)

@@ -60,6 +60,22 @@ def add_common_args(ap: argparse.ArgumentParser, defaults: Dict[str, Any]) -> No
                          "the cohort axis). On CPU, XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8 fakes an "
                          "8-device mesh.")
+    # --- aggregation topology (repro.topo) ---
+    ap.add_argument("--topology", default=None, metavar="NAME",
+                    help="aggregation topology from the @register_topology "
+                         "registry (star | hierarchical | gossip). Default: "
+                         "the star, bit-for-bit identical to not passing "
+                         "the flag. Multi-tier topologies need an additive "
+                         "aggregator and report per-tier Var[X].")
+    ap.add_argument("--tiers", default=None, metavar="E0[,E1,...]",
+                    help="aggregation nodes per tier, bottom-up, e.g. "
+                         "'64,8' for edge->regional->global (hierarchical) "
+                         "or '8' for the peer-node count (gossip)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="simulated-seconds liveness timeout: updates from "
+                         "clients dark for longer are excluded from their "
+                         "tier's reduction (async engine only)")
     ap.add_argument("--shard-cohort", action="store_true",
                     help="cohort-parallel execution: partition the cohort "
                          "training vmap (and eval) across the mesh instead "
@@ -92,8 +108,33 @@ def build_task(args: argparse.Namespace) -> FLTask:
     )
 
 
+def topology_args(args: argparse.Namespace) -> Dict[str, Any]:
+    """``topology``/``topology_kwargs`` RunConfig fields from the shared
+    ``--topology``/``--tiers``/``--heartbeat-timeout`` flags."""
+    if args.topology is None:
+        if args.tiers is not None or args.heartbeat_timeout is not None:
+            raise SystemExit(
+                "--tiers/--heartbeat-timeout need --topology"
+            )
+        return {}
+    kw: Dict[str, Any] = {}
+    if args.tiers is not None:
+        tiers = tuple(int(t) for t in args.tiers.split(","))
+        # gossip is a flat peer graph: one tier, named 'nodes'
+        if args.topology == "gossip":
+            if len(tiers) != 1:
+                raise SystemExit("gossip takes a single --tiers value")
+            kw["nodes"] = tiers[0]
+        else:
+            kw["tiers"] = tiers
+    if args.heartbeat_timeout is not None:
+        kw["heartbeat_timeout"] = args.heartbeat_timeout
+    return {"topology": args.topology, "topology_kwargs": kw}
+
+
 def build_run_config(args: argparse.Namespace, mode: str, eval_div: int,
                      **extra) -> RunConfig:
+    extra = {**topology_args(args), **extra}
     return RunConfig(
         mode=mode,
         n_clients=args.clients, k=args.k, m=args.m, policy=args.policy,
@@ -108,6 +149,25 @@ def build_run_config(args: argparse.Namespace, mode: str, eval_div: int,
         shard_cohort=args.shard_cohort,
         **extra,
     )
+
+
+def print_tier_stats(load_stats: Optional[Dict[str, Any]]) -> None:
+    """Per-tier load metric report (present when a multi-tier topology
+    ran): Var[X] per tier-0 aggregation node next to the fleet-wide
+    figure, which is where inter-tier imbalance shows up."""
+    if not load_stats or "tier_var_X" not in load_stats:
+        return
+    mean = load_stats["tier_mean_X"]
+    var = load_stats["tier_var_X"]
+    ns = load_stats["tier_num_samples"]
+    print(f"per-tier X ({len(var)} tier-0 nodes):")
+    show = range(len(var)) if len(var) <= 8 else list(range(4)) + [-1]
+    for i in show:
+        node = i if i >= 0 else len(var) - 1
+        if node != i and len(var) > 8:
+            print("  ...")
+        print(f"  node {node:3d}: E[X]={mean[node]:.3f} "
+              f"Var[X]={var[node]:.3f} (samples {ns[node]})")
 
 
 def write_result(path: Optional[str], result, args: argparse.Namespace) -> None:

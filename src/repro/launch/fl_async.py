@@ -32,6 +32,7 @@ from repro.launch._fl_cli import (
     add_common_args,
     build_run_config,
     build_task,
+    print_tier_stats,
     write_result,
 )
 from repro.sim import PROFILES
@@ -77,6 +78,7 @@ def main() -> None:
         f"chunk={cfg.resolved_steps_per_chunk()}"
         + (f" mesh_shards={shards}" if shards else "")
         + (" cohort=sharded" if cfg.shard_cohort else "")
+        + (f" topology={cfg.topology_name()}" if cfg.topology else "")
     )
     res = run_engine(engine, progress=True)
 
@@ -92,6 +94,8 @@ def main() -> None:
           f"Var random={load_metric.random_selection_var(cfg.n_clients, cfg.k):.3f} "
           f"Var markov*={load_metric.optimal_var(cfg.n_clients, cfg.k, cfg.m):.3f}")
     print(f"staleness: mean={ws['mean_staleness']:.2f} max={ws['max_staleness']}")
+    if "hb_expired" in ws:
+        print(f"heartbeat churn: {ws['hb_expired']} updates expired")
     # load_stats now come from the device-resident accumulators whenever
     # the (rounds, n) history is not materialized — fleet scale included
     if res.load_stats:
@@ -101,6 +105,7 @@ def main() -> None:
         print(f"X_round: E[X]={es['mean_X']:.3f} Var[X]={es['var_X']:.3f} "
               f"(samples {es['num_samples']}, "
               f"{'history' if res.selection is not None else 'accumulators'})")
+    print_tier_stats(res.load_stats)
     if res.records:
         last = res.records[-1]
         print(f"final: acc={last.accuracy:.4f} eval_loss={last.eval_loss:.4f} "

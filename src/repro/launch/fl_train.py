@@ -27,6 +27,7 @@ from repro.launch._fl_cli import (
     add_common_args,
     build_run_config,
     build_task,
+    print_tier_stats,
     write_result,
 )
 
@@ -46,7 +47,8 @@ def main() -> None:
           f"rounds={cfg.rounds} aggregator={cfg.resolved_aggregator()} "
           f"chunk={cfg.resolved_steps_per_chunk()}"
           + (f" cohort=sharded/x{engine.mesh_shards}"
-             if cfg.shard_cohort else ""))
+             if cfg.shard_cohort else "")
+          + (f" topology={cfg.topology_name()}" if cfg.topology else ""))
     res = run_engine(engine, progress=True)
 
     stats = res.load_stats
@@ -58,6 +60,7 @@ def main() -> None:
           f"Var markov*={load_metric.optimal_var(cfg.n_clients, cfg.k, cfg.m):.3f}")
     print(f"cohort   : mean={stats['mean_cohort']:.2f} std={stats['std_cohort']:.2f} "
           f"range [{stats['min_cohort']}, {stats['max_cohort']}]")
+    print_tier_stats(res.load_stats)
     if args.target_acc:
         r = rounds_to_target(res.history(), args.target_acc)
         print(f"rounds to {args.target_acc:.0%}: {r}")

@@ -38,10 +38,36 @@ class LatencyProfile:
     hetero: float = 0.0  # per-client persistent speed spread (lognormal)
 
     def mean_latency(self) -> float:
-        """Closed-form mean of one dispatch's wall time (for sizing runs)."""
+        """Closed-form mean of one dispatch's wall time: E[speed * compute]
+        + E[comm], matching ``sample_latency`` exactly (lognormal mean
+        ``exp(mu + (sigma^2 + hetero^2)/2)`` plus ``shift + 1/rate``).
+
+        Deliberately *excludes* ``avail_gap`` and ``dropout`` — those
+        shape when a dispatch can start and whether its update survives,
+        not how long the dispatch itself takes. For sizing runs on
+        profiles with off-windows or dropouts (``mobile``), use
+        ``mean_update_interval``, which folds both in; pinned against
+        the empirical samplers by ``tests/test_latency_profiles.py``.
+        """
         compute = math.exp(self.compute_mu + 0.5 * (self.compute_sigma**2 + self.hetero**2))
         comm = self.comm_shift + (1.0 / self.comm_rate if self.comm_rate > 0 else 0.0)
         return compute + comm
+
+    def mean_update_interval(self) -> float:
+        """Expected wall time per *successful* update from one client
+        dispatching back-to-back: each attempt pays the dispatch latency
+        plus the mean off-window before the next session
+        (``sample_avail_gap``'s exponential has mean ``avail_gap``), and
+        a ``dropout`` fraction of attempts is lost, inflating the
+        per-success cost by ``1/(1 - dropout)``. This is the number to
+        size run lengths with on profiles like ``mobile``, where
+        ``mean_latency`` alone underestimates wall time by ~1.8x."""
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError(
+                f"dropout must be in [0, 1) for a finite per-success "
+                f"interval, got {self.dropout}"
+            )
+        return (self.mean_latency() + self.avail_gap) / (1.0 - self.dropout)
 
 
 PROFILES: Dict[str, LatencyProfile] = {

@@ -1,0 +1,29 @@
+"""Aggregation topology as a first-class engine concept.
+
+``repro.topo.graph`` holds the jax-free structure (the ``Topology``
+dataclass, its ``@register_topology`` registry, and the built-in star /
+hierarchical / gossip factories); ``repro.topo.reduce`` compiles a
+topology into the engines' aggregation hook (additive tier reductions,
+per-hop latency); ``repro.topo.heartbeat`` adds liveness/churn.
+"""
+from repro.topo.graph import (
+    Topology,
+    make_topology,
+    register_topology,
+    topology_names,
+)
+from repro.topo.heartbeat import beat, beat_at, expired, init_heartbeat
+from repro.topo.reduce import make_hop_latency, tiered_apply
+
+__all__ = [
+    "Topology",
+    "make_topology",
+    "register_topology",
+    "topology_names",
+    "tiered_apply",
+    "make_hop_latency",
+    "init_heartbeat",
+    "beat",
+    "beat_at",
+    "expired",
+]

@@ -1,0 +1,53 @@
+"""Heartbeat-driven liveness: churned clients leave their tier's reduction.
+
+Real hierarchical fleets lose clients mid-round — a phone leaves wifi, an
+edge site reboots — and the tier coordinator that stops hearing
+heartbeats drops the client from the round rather than stalling the
+reduction. In the simulator a heartbeat is any observable contact:
+dispatch (the client pulled a model) and completion (its update arrived).
+A client whose update lands more than ``timeout`` simulated seconds after
+its last contact has, from its coordinator's perspective, been dark the
+whole time — the update is *excluded from the tier reduction* (weight 0,
+exactly like a dropped or invalid buffer slot) and counted in the
+``hb_expired`` churn telemetry.
+
+All functions are pure jnp ops over a flat ``(n,)`` last-beat vector, so
+the heartbeat state rides the engines' donated scan carry like every
+other per-client array (and shards over the fleet mesh — liveness is a
+local decision, zero cross-device traffic, matching the paper's
+decentralization story).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+def init_heartbeat(n: int) -> Dict[str, jnp.ndarray]:
+    """Fresh heartbeat state: everyone checked in at t=0."""
+    return {"last_beat": jnp.zeros((n,), jnp.float32)}
+
+
+def beat(hb: Dict, mask: jnp.ndarray, t: jnp.ndarray) -> Dict:
+    """Clients under ``mask`` (n,) check in at time ``t`` (scalar)."""
+    return {"last_beat": jnp.where(mask, t, hb["last_beat"])}
+
+
+def beat_at(
+    hb: Dict, scatter_idx: jnp.ndarray, t: jnp.ndarray
+) -> Dict:
+    """Popped clients check in at their completion times: ``scatter_idx``
+    is a masked scatter index vector (out-of-range where invalid, as from
+    ``sim.events.scatter_idx``), ``t`` the per-slot times."""
+    return {
+        "last_beat": hb["last_beat"].at[scatter_idx].set(t, mode="drop")
+    }
+
+
+def expired(
+    last_beat: jnp.ndarray, now: jnp.ndarray, timeout: float
+) -> jnp.ndarray:
+    """Dark-client mask: no contact for more than ``timeout`` seconds at
+    observation time ``now`` (elementwise; shapes broadcast)."""
+    return (now - last_beat) > timeout

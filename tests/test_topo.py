@@ -1,0 +1,477 @@
+"""The ``repro.topo`` aggregation-topology subsystem.
+
+Three contracts pinned here:
+
+  * **Star identity** — a ``topology="star"`` run (and ``topology=None``)
+    is *bit-for-bit* identical to the pre-topology engines, per-step and
+    chunked, async and sync: the degenerate topology adds no state keys,
+    no key folds, no ops.
+  * **Reduction structure, not math** — the tiered reduction over any
+    additive aggregator equals the flat single-server reduction
+    (segment-summing accumulators up the tree preserves the total), and
+    is invariant to how clients permute across tier-0 nodes (hypothesis
+    property test).
+  * **Heartbeat churn** — clients dark for longer than the timeout never
+    contribute to their tier's reduction (weight 0, counted in
+    ``hb_expired``), and an unreachable timeout is bitwise inert.
+
+Multi-device equivalences (sharded fleet + topology, cohort-sharded
+tiered reduction) run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+multi-device job does).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import MNIST_CNN
+from repro.core import distributed as dist
+from repro.data.synthetic import make_image_dataset
+from repro.engine import (
+    AsyncEngine,
+    RunConfig,
+    ShardedAsyncEngine,
+    SyncEngine,
+    make_engine,
+    run_engine,
+)
+from repro.engine.aggregators import make_fedavg, make_fedbuff
+from repro.topo import Topology, make_topology, tiered_apply, topology_names
+from repro.topo.reduce import make_hop_latency
+
+SMALL_CNN = dataclasses.replace(
+    MNIST_CNN, name="paper-cnn-mnist-topo", image_size=8,
+    conv_channels=(4, 8), fc_width=32,
+)
+
+N = 16
+DEVICES = jax.local_device_count()
+SHARDS = dist.resolve_fleet_shards(N, 0, DEVICES)
+needs_mesh = pytest.mark.skipif(
+    DEVICES < 2, reason="needs a multi-device mesh"
+)
+
+# cohort-sharded tolerance (cross-device reduction order), matching
+# tests/test_cohort_engine.py
+RTOL, ATOL = 5e-4, 1e-5
+
+HIER = {"topology": "hierarchical", "topology_kwargs": {"tiers": (4, 2)}}
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        "mnist-topo", 10, 8, 1, 120, 60, seed=0, difficulty=0.8
+    )
+    return make_cnn_task(SMALL_CNN, train, test, n_clients=N)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_clients=N, k=4, m=4, policy="markov", rounds=5, local_epochs=1,
+        batch_size=5, eval_every=2, mode="async", buffer_size=3,
+        profile="mobile",
+    )
+    base.update(kw)
+    return RunConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _assert_trees_close(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), rtol=RTOL, atol=ATOL
+        )
+
+
+def _per_step(engine, rounds, n):
+    state = engine.init()
+    sel = np.zeros((rounds, n), dtype=bool)
+    losses = []
+    for r in range(rounds):
+        state, aux = engine.step(state, r)
+        sel[r] = np.asarray(aux["send"])
+        losses.append(float(aux["loss"]))
+    return state, sel, losses
+
+
+# ---------------------------------------------------------------------------
+# Graph structure + registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_builtins():
+    for name in ("star", "hierarchical", "gossip"):
+        assert name in topology_names()
+    topo = make_topology("hierarchical", tiers=(8, 2))
+    assert topo.tier_sizes == (8, 2)
+    assert not topo.is_star
+    assert make_topology("star").is_star
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("ring-of-fire")
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError, match="no aggregation tiers"):
+        Topology("bad", kind="star", tier_sizes=(4,))
+    with pytest.raises(ValueError, match=">= 1 tier"):
+        Topology("bad", kind="hier")
+    with pytest.raises(ValueError, match="non-increasing"):
+        Topology("bad", kind="hier", tier_sizes=(2, 8))
+    with pytest.raises(ValueError, match="tier_profiles"):
+        Topology("bad", kind="hier", tier_sizes=(4,),
+                 tier_profiles=("datacenter",))  # needs 2 hops
+    with pytest.raises(ValueError, match="exactly one tier"):
+        Topology("bad", kind="gossip", tier_sizes=(8, 2))
+    with pytest.raises(ValueError, match="gossip_degree"):
+        Topology("bad", kind="gossip", tier_sizes=(4,), gossip_degree=3)
+    with pytest.raises(ValueError, match="heartbeat_timeout"):
+        Topology("bad", heartbeat_timeout=-1.0)
+    # fleet-shape validation
+    with pytest.raises(ValueError, match="tier-0"):
+        make_topology("hierarchical", tiers=(64,)).validate(16)
+    with pytest.raises(ValueError, match="topology_kwargs"):
+        _cfg(topology_kwargs={"tiers": (4,)})
+
+
+def test_assign_and_parents_are_balanced():
+    topo = make_topology("hierarchical", tiers=(4, 2))
+    assign = topo.assign(N)
+    assert assign.shape == (N,) and assign.dtype == np.int32
+    np.testing.assert_array_equal(np.bincount(assign), [4, 4, 4, 4])
+    (p0,) = topo.parents()
+    np.testing.assert_array_equal(p0, [0, 0, 1, 1])
+
+
+def test_gossip_mixing_doubly_stochastic():
+    topo = make_topology("gossip", nodes=8, degree=4)
+    mix = topo.gossip_mixing()
+    np.testing.assert_allclose(mix.sum(axis=0), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(mix.sum(axis=1), 1.0, rtol=1e-6)
+    np.testing.assert_array_equal(mix, mix.T)
+
+
+# ---------------------------------------------------------------------------
+# Golden: the degenerate star is bit-for-bit today's engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("agg", ["fedbuff", "fedavg"])
+def test_star_async_bit_for_bit(small_task, agg):
+    cfg = _cfg(aggregator=agg)
+    ref_state, ref_sel, ref_losses = _per_step(
+        AsyncEngine(small_task, cfg), cfg.rounds, N
+    )
+    st_state, st_sel, st_losses = _per_step(
+        AsyncEngine(small_task, dataclasses.replace(cfg, topology="star")),
+        cfg.rounds, N,
+    )
+    np.testing.assert_array_equal(st_sel, ref_sel)
+    np.testing.assert_array_equal(st_losses, ref_losses)
+    _assert_trees_equal(st_state["params"], ref_state["params"])
+    assert set(st_state["stats"]) == set(ref_state["stats"])
+    for key, val in ref_state["stats"].items():
+        np.testing.assert_array_equal(
+            np.asarray(st_state["stats"][key]), np.asarray(val), err_msg=key
+        )
+    # chunked driving too
+    ref = run_engine(AsyncEngine(small_task, dataclasses.replace(
+        cfg, steps_per_chunk=5
+    )))
+    star = run_engine(AsyncEngine(small_task, dataclasses.replace(
+        cfg, steps_per_chunk=5, topology="star"
+    )))
+    np.testing.assert_array_equal(star.selection, ref.selection)
+    _assert_trees_equal(star.params, ref.params)
+    assert star.wall_stats == ref.wall_stats
+
+
+def test_star_sync_bit_for_bit(small_task):
+    cfg = _cfg(mode="sync", buffer_size=None, profile="lognormal")
+    ref_state, ref_sel, ref_losses = _per_step(
+        SyncEngine(small_task, cfg), cfg.rounds, N
+    )
+    st_state, st_sel, st_losses = _per_step(
+        SyncEngine(small_task, dataclasses.replace(cfg, topology="star")),
+        cfg.rounds, N,
+    )
+    np.testing.assert_array_equal(st_sel, ref_sel)
+    np.testing.assert_array_equal(st_losses, ref_losses)
+    _assert_trees_equal(st_state["params"], ref_state["params"])
+    ref = run_engine(SyncEngine(small_task, dataclasses.replace(
+        cfg, steps_per_chunk=5
+    )))
+    star = run_engine(SyncEngine(small_task, dataclasses.replace(
+        cfg, steps_per_chunk=5, topology="star"
+    )))
+    np.testing.assert_array_equal(star.selection, ref.selection)
+    _assert_trees_equal(star.params, ref.params)
+    assert star.load_stats == ref.load_stats
+
+
+# ---------------------------------------------------------------------------
+# Tier reductions: structure only, no new aggregator math
+# ---------------------------------------------------------------------------
+
+
+def _toy_cohort(seed, b=8, n=N):
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (3, 4)), "b": jnp.zeros((4,))}
+    updates = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 1),
+                                    (b,) + p.shape), g
+    )
+    bases = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 2),
+                                    (b,) + p.shape), g
+    )
+    w = jax.random.uniform(jax.random.fold_in(key, 3), (b,))
+    idx = jax.random.randint(jax.random.fold_in(key, 4), (b,), 0, n)
+    return g, updates, bases, w, idx
+
+
+@pytest.mark.parametrize("make_agg", [make_fedavg, make_fedbuff])
+@pytest.mark.parametrize("tiers", [(4,), (4, 2), (8, 4, 2)])
+def test_tiered_apply_matches_flat_reduction(make_agg, tiers):
+    agg = make_agg()
+    topo = make_topology("hierarchical", tiers=tiers)
+    g, updates, bases, w, idx = _toy_cohort(0)
+    flat = agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
+    tiered = tiered_apply(agg, topo, N)(g, updates, bases, w, idx)
+    _assert_trees_close(tiered, flat)
+
+
+def test_tiered_apply_unstacked_bases_matches_flat():
+    agg = make_fedbuff()
+    topo = make_topology("hierarchical", tiers=(4,))
+    g, updates, _, w, idx = _toy_cohort(1)
+    flat = agg.finalize(g, agg.accumulate(agg.init(g), updates, g, w))
+    tiered = tiered_apply(agg, topo, N, stacked_bases=False)(
+        g, updates, g, w, idx
+    )
+    _assert_trees_close(tiered, flat)
+
+
+def test_gossip_converges_to_flat_reduction():
+    # enough mixing rounds -> every node's view is the network mean and
+    # the node-0 readout equals the hierarchical (= flat) reduction
+    agg = make_fedavg()
+    topo = make_topology("gossip", nodes=4, degree=2, rounds=64)
+    g, updates, bases, w, idx = _toy_cohort(2)
+    flat = agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
+    gossiped = tiered_apply(agg, topo, N)(g, updates, bases, w, idx)
+    _assert_trees_close(gossiped, flat)
+
+
+def test_tiered_apply_rejections():
+    topo = make_topology("hierarchical", tiers=(4,))
+    non_additive = dataclasses.replace(make_fedavg(), additive=False)
+    with pytest.raises(ValueError, match="not additive"):
+        tiered_apply(non_additive, topo, N)
+    with pytest.raises(ValueError, match="star"):
+        tiered_apply(make_fedavg(), make_topology("star"), N)
+
+
+def test_tier_permutation_invariance_hypothesis():
+    """Property: for additive aggregators the tiered reduction does not
+    depend on which tier-0 node a client hangs off — permuting the
+    client -> tier assignment leaves the aggregated params unchanged."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    agg = make_fedavg()
+    topo = make_topology("hierarchical", tiers=(4, 2))
+    apply = jax.jit(tiered_apply(agg, topo, N))
+    g, updates, bases, _, _ = _toy_cohort(3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        perm=st.permutations(list(range(N))),
+        data=st.data(),
+    )
+    def check(perm, data):
+        b = jax.tree.leaves(updates)[0].shape[0]
+        w = jnp.asarray(
+            data.draw(st.lists(
+                st.floats(0.0, 4.0, allow_nan=False, width=32),
+                min_size=b, max_size=b,
+            )),
+            jnp.float32,
+        )
+        idx = jnp.asarray(
+            data.draw(st.lists(st.integers(0, N - 1), min_size=b,
+                               max_size=b)),
+            jnp.int32,
+        )
+        base = apply(g, updates, bases, w, idx)
+        permuted = apply(g, updates, bases, w, jnp.asarray(perm)[idx])
+        _assert_trees_close(permuted, base)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end topology runs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["async", "sync"])
+def test_hierarchical_run_reports_per_tier_stats(small_task, mode):
+    kw = dict(HIER)
+    if mode == "sync":
+        kw.update(mode="sync", buffer_size=None, profile="lognormal")
+    res = run_engine(make_engine(small_task, _cfg(rounds=8, **kw)))
+    for key in ("tier_num_samples", "tier_mean_X", "tier_var_X"):
+        assert key in res.load_stats
+        assert len(res.load_stats[key]) == 4  # tier-0 nodes
+    # tier samples partition the fleet-wide samples
+    assert sum(res.load_stats["tier_num_samples"]) == \
+        res.load_stats["num_samples"]
+    assert all(np.isfinite(res.records[-1].train_loss)
+               for _ in [0])  # run completed
+
+
+def test_hop_latency_slows_the_simulated_clock(small_task):
+    # every dispatch pays >= comm_shift per hop on top of its own
+    # latency, so the hierarchical clock must run ahead of the star's
+    cfg = _cfg(rounds=5)
+    star = run_engine(AsyncEngine(small_task, cfg))
+    hier = run_engine(AsyncEngine(small_task, dataclasses.replace(
+        cfg, **HIER
+    )))
+    assert hier.wall_stats["sim_time"] > star.wall_stats["sim_time"]
+    hop = make_hop_latency(_cfg(**HIER).resolved_topology(), N)
+    extra = np.asarray(hop(jax.random.PRNGKey(0)))
+    assert extra.shape == (N,) and (extra > 0).all()
+    assert make_hop_latency(make_topology("star"), N) is None
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat churn
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_excludes_churned_clients(small_task):
+    # a timeout below any possible latency declares every completion
+    # dark: nothing may ever reach the reduction, params stay at init
+    cfg = _cfg(rounds=5, topology="hierarchical",
+               topology_kwargs={"tiers": (4,), "heartbeat_timeout": 1e-6})
+    eng = AsyncEngine(small_task, cfg)
+    state, _, _ = _per_step(eng, cfg.rounds, N)
+    assert float(state["stats"]["updates"]) == 0
+    assert float(state["stats"]["hb_expired"]) > 0
+    _assert_trees_equal(state["params"], eng.init()["params"])
+    # version never advances: no aggregation ever happened
+    assert int(state["version"]) == 0
+
+
+def test_heartbeat_unreachable_timeout_is_inert(small_task):
+    # a timeout no simulated gap can exceed changes nothing but the
+    # bookkeeping keys: params/selection/losses stay bitwise identical
+    cfg = _cfg(rounds=5, topology="hierarchical",
+               topology_kwargs={"tiers": (4,)})
+    ref_state, ref_sel, ref_losses = _per_step(
+        AsyncEngine(small_task, cfg), cfg.rounds, N
+    )
+    hcfg = _cfg(rounds=5, topology="hierarchical",
+                topology_kwargs={"tiers": (4,), "heartbeat_timeout": 1e9})
+    hb_state, hb_sel, hb_losses = _per_step(
+        AsyncEngine(small_task, hcfg), cfg.rounds, N
+    )
+    np.testing.assert_array_equal(hb_sel, ref_sel)
+    np.testing.assert_array_equal(hb_losses, ref_losses)
+    _assert_trees_equal(hb_state["params"], ref_state["params"])
+    assert float(hb_state["stats"]["hb_expired"]) == 0
+    assert float(hb_state["stats"]["updates"]) == float(
+        ref_state["stats"]["updates"]
+    )
+
+
+def test_heartbeat_on_a_star(small_task):
+    # heartbeat is orthogonal to tiers: a star with an unreachable
+    # timeout still matches the plain engine bitwise on params/selection
+    cfg = _cfg(rounds=4)
+    ref = run_engine(AsyncEngine(small_task, cfg))
+    hb = run_engine(AsyncEngine(small_task, dataclasses.replace(
+        cfg, topology="star", topology_kwargs={"heartbeat_timeout": 1e9}
+    )))
+    np.testing.assert_array_equal(hb.selection, ref.selection)
+    _assert_trees_equal(hb.params, ref.params)
+    assert hb.wall_stats["hb_expired"] == 0
+
+
+def test_sync_rejects_heartbeat(small_task):
+    with pytest.raises(ValueError, match="async"):
+        SyncEngine(small_task, _cfg(
+            mode="sync", buffer_size=None, profile="lognormal",
+            topology="star", topology_kwargs={"heartbeat_timeout": 1.0},
+        ))
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution under a topology
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_hierarchical_bit_for_bit(small_task):
+    # fleet sharding must stay bit-exact under a topology, exactly like
+    # it is for the star (tests/test_sharded_engine.py)
+    cfg = _cfg(rounds=5, topology="hierarchical",
+               topology_kwargs={"tiers": (4, 2), "heartbeat_timeout": 50.0})
+    ref_state, ref_sel, ref_losses = _per_step(
+        AsyncEngine(small_task, cfg), cfg.rounds, N
+    )
+    sh_state, sh_sel, sh_losses = _per_step(
+        ShardedAsyncEngine(
+            small_task, dataclasses.replace(cfg, mesh_shards=SHARDS)
+        ),
+        cfg.rounds, N,
+    )
+    np.testing.assert_array_equal(sh_sel, ref_sel)
+    np.testing.assert_array_equal(sh_losses, ref_losses)
+    _assert_trees_equal(sh_state["params"], ref_state["params"])
+    for key, val in ref_state["stats"].items():
+        np.testing.assert_array_equal(
+            np.asarray(sh_state["stats"][key]), np.asarray(val), err_msg=key
+        )
+    _assert_trees_equal(sh_state["tier_acc"], ref_state["tier_acc"])
+
+
+@needs_mesh
+def test_cohort_sharded_hierarchical_matches_replicated(small_task):
+    # the tiered reduction in cohort-parallel form: same one-psum merge
+    # pattern, allclose to the replicated layout
+    cfg = _cfg(rounds=5, **HIER)
+    ref = run_engine(AsyncEngine(small_task, cfg))
+    coh = run_engine(make_engine(small_task, dataclasses.replace(
+        cfg, mesh_shards=SHARDS, shard_cohort=True
+    )))
+    np.testing.assert_array_equal(coh.selection, ref.selection)
+    _assert_trees_close(coh.params, ref.params)
+    for key, val in ref.load_stats.items():
+        np.testing.assert_allclose(coh.load_stats[key], val,
+                                   rtol=RTOL, atol=ATOL, err_msg=key)
+
+
+@needs_mesh
+def test_cohort_sharded_sync_hierarchical(small_task):
+    cfg = _cfg(mode="sync", buffer_size=None, profile="lognormal",
+               rounds=5, **HIER)
+    ref = run_engine(SyncEngine(small_task, cfg))
+    coh = run_engine(make_engine(small_task, dataclasses.replace(
+        cfg, mesh_shards=0, shard_cohort=True
+    )))
+    np.testing.assert_array_equal(coh.selection, ref.selection)
+    _assert_trees_close(coh.params, ref.params)
+    for key, val in ref.load_stats.items():
+        np.testing.assert_allclose(coh.load_stats[key], val,
+                                   rtol=RTOL, atol=ATOL, err_msg=key)
