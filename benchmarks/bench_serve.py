@@ -1,0 +1,111 @@
+"""Serving-tier benchmarks: continuous-batching decode tick throughput,
+TTFT (prefill + join), and staleness/Var[X] telemetry from a full serve
+loop — the metrics the ROADMAP's serving item promised next to the
+training rows.
+
+The store is a synthetic 8-deep version ring over the reduced
+``tinyllama-1.1b`` params (no training run: the tick/prefill costs are a
+property of the decode path, not of how the ring was filled); the loop
+row runs the Markov router over a Poisson trace so the derived
+staleness/Var[X] figures come from real routing decisions.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ARCH = "tinyllama-1.1b"
+REPLICAS, SLOTS = 2, 4
+PROMPT, GEN = 16, 16
+
+
+def _bench(fn, warmup: int = 3, iters: int = 20) -> float:
+    """Mean us/call after warmup; ``fn`` must block on device work."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_serve(csv_rows) -> None:
+    from repro.configs import get_arch
+    from repro.models import factory
+    from repro.serve import ReplicaPool, Request, VersionStore, run_serve_loop
+    from repro.sim import arrivals as arr_mod, get_profile
+
+    cfg = get_arch(ARCH).reduced()
+    model = factory.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    h = 8
+    hist = jax.tree.map(lambda p: jnp.stack([p] * h), params)
+    store = VersionStore(hist, jnp.asarray(h - 1, jnp.int32), h)
+    ctx = PROMPT + 2 * GEN
+
+    print(f"\n== serving tier ({cfg.name}, {REPLICAS} replicas x {SLOTS} "
+          f"slots, ctx {ctx}) ==")
+
+    # --- steady-state decode tick: every slot busy, no evictions
+    pool = ReplicaPool(model, REPLICAS, SLOTS, ctx)
+    pool.refresh(store)
+    key = jax.random.PRNGKey(1)
+    rid = 0
+    for r in range(REPLICAS):
+        for _ in range(SLOTS):
+            prompt = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, rid), (PROMPT,), 0, cfg.vocab_size
+            ))
+            pool.join(r, Request(rid=rid, tick=0, prompt=prompt,
+                                 gen_len=1 << 20), tick=0)
+            rid += 1
+
+    tick_holder = [0]
+
+    def one_tick():
+        tick_holder[0] += 1
+        pool.decode_tick(tick_holder[0])  # host pull of next tokens blocks
+
+    tick_us = _bench(one_tick)
+    streams = REPLICAS * SLOTS
+    tok_s = streams / (tick_us / 1e6)
+    name = f"serve_tick_{ARCH}_r{REPLICAS}s{SLOTS}"
+    print(f"  decode tick ({streams} streams): {tick_us:.0f}us "
+          f"-> {tok_s:.0f} tok/s")
+    csv_rows.append((name, tick_us, f"tok_s={tok_s:.0f}"))
+
+    # --- TTFT compute path: prefill + slot write for one joining request
+    prompt = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 999), (PROMPT,), 0, cfg.vocab_size
+    ))
+    req = Request(rid=rid, tick=0, prompt=prompt, gen_len=1 << 20)
+
+    def one_join():
+        pool.active[0][0] = None  # re-admit over the same slot
+        pool.join(0, req, tick=0)
+
+    join_us = _bench(one_join, warmup=2, iters=10)
+    print(f"  prefill+join (p{PROMPT}): {join_us:.0f}us")
+    csv_rows.append(
+        (f"serve_ttft_prefill_{ARCH}_p{PROMPT}", join_us, f"ctx={ctx}")
+    )
+
+    # --- full loop under the Markov router: staleness / Var[X] telemetry
+    proc = arr_mod.from_profile(get_profile("lognormal"), 1.5, PROMPT, GEN)
+    reqs = arr_mod.sample_requests(jax.random.PRNGKey(2), proc, 16,
+                                   cfg.vocab_size)
+    rep = run_serve_loop(
+        model, store, reqs, router="markov", n_replicas=REPLICAS,
+        slots=SLOTS, ctx=ctx, seed=0,
+    )
+    print(f"  {rep.summary()}")
+    csv_rows.append((
+        f"serve_loop_markov_r{REPLICAS}s{SLOTS}", 0.0,
+        f"ttft_ticks={rep.ttft_ticks_mean:.2f} "
+        f"staleness_mean={rep.staleness_mean:.2f} "
+        f"staleness_max={rep.staleness_max} "
+        f"var_X={rep.serve_stats['var_X']:.3f} tok_s={rep.tok_s:.0f}",
+    ))

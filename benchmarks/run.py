@@ -25,10 +25,12 @@ import time
 # rows every committed baseline must carry, whatever --only subset is
 # being checked: renaming or dropping one of these must fail the gate
 # loudly instead of silently shrinking coverage. The hierarchical rows
-# come from bench_async_fleet.run_topo on 8 fake devices.
+# come from bench_async_fleet.run_topo on 8 fake devices; the serve row
+# from bench_serve.run_serve (single device).
 REQUIRED_BASELINE_ROWS = (
     "async_engine_step_n262144_hier64x8",
     "async_engine_step_n262144_hier64x8_sharded8",
+    "serve_tick_tinyllama-1.1b_r2s4",
 )
 
 
@@ -87,7 +89,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: variance,scheduler,kernels,convergence,"
-                         "roofline,async,sharded,topo")
+                         "roofline,async,sharded,topo,serve")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--out", default=None,
@@ -139,6 +141,10 @@ def main() -> None:
         from benchmarks import bench_async_fleet
 
         bench_async_fleet.run_topo(csv_rows)
+    if on("serve"):
+        from benchmarks import bench_serve
+
+        bench_serve.run_serve(csv_rows)
     if on("roofline"):
         from benchmarks import bench_roofline
 

@@ -1,0 +1,94 @@
+"""Serve while training: round-robin vs Markov-admission routing.
+
+One fleet trains a reduced LLM arch with the async engine while a
+replica pool serves inference traffic from the same ring of retained
+global versions. The same request trace is routed twice — once with the
+deterministic ``round_robin`` router (the Var[X] = 0 reference) and once
+with the paper's Markov admission rule — and the two runs are compared
+on the serving tier's load metric: Var[X] over replicas (assignment-gap
+variance, one routing decision = one epoch), time-to-first-token, and
+staleness-of-served-version.
+
+  PYTHONPATH=src python examples/serve_while_training.py
+  PYTHONPATH=src python examples/serve_while_training.py --replicas 4 --ticks 24
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.engine import AsyncEngine, RunConfig
+from repro.fl.task import make_lm_task
+from repro.models import factory
+from repro.serve import VersionStore, run_serve_loop
+from repro.sim import arrivals as arr_mod, get_profile
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="tinyllama-1.1b")
+ap.add_argument("--clients", type=int, default=16)
+ap.add_argument("--k", type=int, default=4)
+ap.add_argument("--steps", type=int, default=6)
+ap.add_argument("--replicas", type=int, default=3)
+ap.add_argument("--slots", type=int, default=2)
+ap.add_argument("--ticks", type=int, default=16)
+ap.add_argument("--rate", type=float, default=1.0)
+ap.add_argument("--prompt-len", type=int, default=6)
+ap.add_argument("--gen", type=int, default=6)
+ap.add_argument("--seed", type=int, default=0)
+args = ap.parse_args()
+
+cfg_arch = get_arch(args.arch).reduced()
+task = make_lm_task(cfg_arch, args.clients, seq_len=32, docs_per_client=4,
+                    seed=args.seed)
+model = factory.build(cfg_arch)
+cfg = RunConfig(
+    mode="async", n_clients=args.clients, k=args.k, m=8, policy="markov",
+    rounds=args.steps, local_epochs=1, batch_size=4, lr0=0.05,
+    seed=args.seed, eval_every=args.steps, collect_history=False,
+)
+
+print(f"== training {cfg_arch.name} federated ({args.steps} async steps) ==")
+engine = AsyncEngine(task, cfg)
+state = engine.init()
+state, aux = engine.run_chunk(state, 0, args.steps, False)
+store = VersionStore.from_engine(engine, state)
+print(f"ring: versions {store.retained_versions()} retained "
+      f"(H={store.max_versions}), head v{store.latest}, "
+      f"train loss {float(np.asarray(aux['loss'])[-1]):.4f}")
+
+proc = arr_mod.from_profile(
+    get_profile("lognormal"), args.rate, args.prompt_len, args.gen
+)
+reqs = arr_mod.sample_requests(
+    jax.random.PRNGKey(args.seed + 1), proc, args.ticks, cfg_arch.vocab_size
+)
+print(f"\n== serving {len(reqs)} requests on {args.replicas} replicas x "
+      f"{args.slots} slots (staggered pins) ==")
+
+reports = {}
+for router in ("round_robin", "markov"):
+    reports[router] = run_serve_loop(
+        model, store, reqs, router=router, n_replicas=args.replicas,
+        slots=args.slots, seed=args.seed,
+    )
+
+print(f"\n{'':14s} {'round_robin':>14s} {'markov':>14s}")
+rows = [
+    ("Var[X]", lambda r: f"{r.serve_stats['var_X']:.3f}"),
+    ("E[X]", lambda r: f"{r.serve_stats['mean_X']:.3f}"),
+    ("ttft ticks", lambda r: f"{r.ttft_ticks_mean:.2f}"),
+    ("staleness", lambda r: f"{r.staleness_mean:.2f}"),
+    ("tok/s", lambda r: f"{r.tok_s:.0f}"),
+    ("rejected", lambda r: str(r.rejections)),
+]
+for label, fmt in rows:
+    print(f"{label:14s} {fmt(reports['round_robin']):>14s} "
+          f"{fmt(reports['markov']):>14s}")
+for name, rep in reports.items():
+    per = rep.serve_stats["replica_mean_X"]
+    print(f"per-replica E[X] ({name}): "
+          + ", ".join("-" if np.isnan(v) else f"{v:.2f}" for v in per))
+print("\nround_robin is the Var[X] = 0 reference; the Markov rule gets "
+      "close without any coordination — each replica admits itself from "
+      "its own age chain, the paper's argument applied to serving.")

@@ -390,3 +390,61 @@ def tier_stats_from_accum(acc) -> dict:
         "tier_mean_X": [float(v) for v in mean],
         "tier_var_X": [float(v) for v in var],
     }
+
+
+# ---------------------------------------------------------------------------
+# Per-replica accumulators: the serving tier's load metric
+# ---------------------------------------------------------------------------
+#
+# The serving tier (repro.serve) applies the identical Var[X] argument to
+# inference replicas: X = number of routing decisions between subsequent
+# assignments of a replica (one decision = one epoch of the age chain, so
+# the paper's closed forms for n := replicas, k := 1 apply verbatim). The
+# machinery is the tier accumulator with the identity grouping — each
+# replica is its own "node" — which keeps the per-replica moments as (R,)
+# vectors under the same Kahan compensation, and the fleet-wide moments
+# fall out of the summed per-replica sums.
+
+
+def init_replica_accum(n_replicas: int):
+    """Fresh per-replica assignment-gap accumulator for ``n_replicas``
+    serving replicas (one slot per replica; identity grouping)."""
+    return init_tier_accum(n_replicas, n_replicas)
+
+
+def update_replica_accum(acc, assigned):
+    """Fold one routing decision's (R,) bool assignment vector into the
+    accumulator (all-False advances the epoch without a sample — a
+    rejected admission still ages every replica's chain)."""
+    import jax.numpy as jnp
+
+    r = assigned.shape[0]
+    return update_tier_accum(acc, assigned, jnp.arange(r, dtype=jnp.int32))
+
+
+def replica_stats_from_accum(acc) -> dict:
+    """``serve_stats``: fleet-wide mean/Var of the replica assignment gap
+    X (from the summed per-replica moments) plus the per-replica
+    breakdown, in the same shape ``selection_stats_from_accum`` /
+    ``tier_stats_from_accum`` report."""
+    a = {
+        name: np.asarray(acc[name], np.float64)
+        - np.asarray(acc["c_" + name], np.float64)
+        for name in _TIER_MOMENTS
+    }
+    cnt = float(a["gap_cnt"].sum())
+    if cnt > 0:
+        mean = float(a["gap_sum"].sum()) / cnt
+        var = max(float(a["gap_sumsq"].sum()) / cnt - mean * mean, 0.0)
+    else:
+        mean = var = float("nan")
+    per = tier_stats_from_accum(acc)
+    return {
+        "num_samples": int(cnt),
+        "mean_X": mean,
+        "var_X": var,
+        "decisions": int(acc["steps"]),
+        "replica_num_samples": per["tier_num_samples"],
+        "replica_mean_X": per["tier_mean_X"],
+        "replica_var_X": per["tier_var_X"],
+    }

@@ -129,6 +129,15 @@ class AsyncEngine:
     def eval_params(self, state: Dict):
         return state["params"]
 
+    def ring_snapshot(self, state: Dict):
+        """Device-resident view of the retained-version ring for the
+        serving tier (``repro.serve.VersionStore``): ``(hist, version,
+        max_versions)``. No host pull and no copy — the leaves stay
+        wherever the engine keeps them (the sharded engines replicate
+        ``hist``/``version``, so the same snapshot works unchanged), and
+        the serving tier reads versions without synchronizing training."""
+        return state["hist"], state["version"], self.cfg.max_versions
+
     def evaluate(self, state: Dict) -> Dict:
         """Held-out eval on the current global params. Cohort-sharded
         engines override this to shard the eval-batch axis over the mesh

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import factory
+from repro.serve.batching import prefill_tokens
 
 
 def main() -> None:
@@ -28,25 +29,29 @@ def main() -> None:
 
     cfg = get_arch(args.arch).reduced()
     model = factory.build(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    # one split up front: params init, prompt draw, encoder frames, and the
+    # sampling loop each get an independent key
+    key, k_init, k_prompt, k_frames = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = model.init(k_init)
 
     ctx = args.prompt_len + args.gen
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    prompts = jax.random.randint(
+        k_prompt, (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
 
     if cfg.encoder is not None:
         frames = jax.random.normal(
-            key, (args.batch, cfg.encoder.source_len, cfg.d_model), jnp.float32
+            k_frames, (args.batch, cfg.encoder.source_len, cfg.d_model), jnp.float32
         )
         batch = {"frames": frames, "tokens": prompts, "seq_len": ctx}
         logits, caches = model.prefill(params, batch)
     else:
-        # decode-from-scratch over the prompt to fill a ctx-sized ring cache
+        # decode-from-scratch over the prompt to fill a ctx-sized ring
+        # cache: one scanned prefill program, not a per-token dispatch loop
         caches = model.init_decode_caches(args.batch, ctx)
-        step = jax.jit(model.decode_step)
-        logits = None
-        for t in range(args.prompt_len):
-            logits, caches = step(params, caches, prompts[:, t : t + 1])
+        logits, caches = jax.jit(
+            lambda p, c, toks: prefill_tokens(model.decode_step, p, c, toks)
+        )(params, caches, prompts)
 
     step = jax.jit(model.decode_step)
     out_tokens = []

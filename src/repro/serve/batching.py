@@ -1,0 +1,67 @@
+"""Continuous-batching primitives over the model decode path.
+
+The unit of serving state is a *slot*: one batch-1 decode-cache pytree
+(ring KV cache plus its own scalar write index). A pool stacks ``S``
+slots on a leading axis and advances all of them with one vmapped
+``decode_step`` per tick — because every slot carries its *own* cache
+index, slots are fully independent: a request joining slot 3 or leaving
+slot 0 cannot perturb the tokens slot 1 decodes (bit-for-bit, pinned by
+``tests/test_serve.py``). Join = prefill the new request's prompt into a
+fresh batch-1 cache and write it over the slot; evict = mark the slot
+free (its stale cache is simply overwritten by the next join).
+
+``prefill_tokens`` is the shared prompt-ingestion path: one
+``lax.scan`` of ``decode_step`` over the prompt tokens — a single
+compiled program instead of a Python per-token dispatch loop — used by
+both ``repro.launch.serve`` and the serving loop's join path.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def prefill_tokens(
+    decode_step: Callable, params, caches, prompts: jnp.ndarray
+) -> Tuple[jnp.ndarray, Any]:
+    """Feed ``prompts`` (B, P) int32 through ``decode_step`` one token at
+    a time under one ``lax.scan``; returns ``(logits, caches)`` where
+    ``logits`` is the last step's (B, 1, V) output — bit-for-bit the
+    Python loop ``for t: logits, caches = decode_step(..., prompts[:, t:t+1])``
+    without the per-token host roundtrip."""
+    toks = jnp.swapaxes(prompts, 0, 1)[:, :, None]  # (P, B, 1)
+
+    def body(c, tok):
+        logits, c = decode_step(params, c, tok)
+        return c, logits
+
+    caches, logits = jax.lax.scan(body, caches, toks)
+    return logits[-1], caches
+
+
+def init_slot_pool(model, slots: int, ctx: int):
+    """(S,)-stacked batch-1 decode caches: ``slots`` independent streams,
+    each with its own ring cache and scalar write index."""
+    one = model.init_decode_caches(1, ctx)
+    return jax.tree.map(lambda a: jnp.stack([a] * slots), one)
+
+
+def slot_decode_fn(model) -> Callable:
+    """The pool's decode tick: ``decode_step`` vmapped over the slot axis
+    (params broadcast), jitted once per (slots, ctx) shape.
+
+        logits, pool = tick(params, pool, tokens)   # tokens (S, 1, 1)
+    """
+    return jax.jit(jax.vmap(model.decode_step, in_axes=(None, 0, 0)))
+
+
+def write_slot(pool, s: int, one):
+    """Join: overwrite slot ``s`` with a freshly prefilled batch-1 cache."""
+    return jax.tree.map(lambda p, o: p.at[s].set(o), pool, one)
+
+
+def read_slot(pool, s: int):
+    """The batch-1 cache pytree currently held by slot ``s``."""
+    return jax.tree.map(lambda p: p[s], pool)

@@ -1,0 +1,329 @@
+"""The serving tier: a replica pool over the version ring, driven by a
+router and a continuous-batching request loop.
+
+One fleet both trains and serves: training advances the async engine's
+ring of retained global versions; each serving *replica* pins one
+retained version out of a ``VersionStore`` snapshot (replica i serves
+``latest - i * stagger``, refreshed between training chunks) and decodes
+up to ``slots`` request streams concurrently through the vmapped
+continuous-batching pool (``repro.serve.batching``). A ``Router`` from
+the ``@register_router`` registry decides which replica admits each
+queued request — every routing decision is one epoch of the paper's
+load metric, so Var[X] over replicas comes from the same Kahan
+accumulators the training engines use (``load_metric.*_replica_accum``).
+
+Reported per run (``ServeReport``): time-to-first-token (scheduler ticks
+from arrival to the prefill's first emitted token), decode throughput in
+tokens/s of host wall time, staleness-of-served-version (age of each
+stream's pinned version relative to the ring head at join time), and
+``serve_stats`` — fleet-wide and per-replica E[X]/Var[X] over routing
+decisions.
+
+Decoding is greedy (argmax): the serving loop's contract is bit-for-bit
+stream isolation under join/evict churn, which sampling noise would mask.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.load_metric import (
+    init_replica_accum,
+    replica_stats_from_accum,
+    update_replica_accum,
+)
+from repro.serve.batching import (
+    init_slot_pool,
+    prefill_tokens,
+    slot_decode_fn,
+    write_slot,
+)
+from repro.serve.router import Router, make_router
+from repro.serve.store import VersionStore
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request of the open-loop arrival process."""
+
+    rid: int
+    tick: int  # arrival tick
+    prompt: np.ndarray  # (P,) int32 prompt tokens
+    gen_len: int  # tokens to generate (>= 1)
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One completed request stream."""
+
+    rid: int
+    replica: int
+    version: int  # global model version served
+    staleness: int  # ring head - version, at join time
+    arrival_tick: int
+    first_token_tick: int
+    done_tick: int
+    tokens: List[int]
+
+    @property
+    def ttft_ticks(self) -> int:
+        """Scheduler ticks from arrival to the first emitted token (the
+        join tick's prefill emits it, so a same-tick join scores 1)."""
+        return self.first_token_tick - self.arrival_tick + 1
+
+
+class ReplicaPool:
+    """``n_replicas`` serving replicas, each pinning one retained version
+    and running a ``slots``-wide continuous-batching decode pool."""
+
+    def __init__(self, model, n_replicas: int, slots: int, ctx: int,
+                 stagger: int = 1):
+        self.model = model
+        self.n_replicas = n_replicas
+        self.slots = slots
+        self.ctx = ctx
+        self.stagger = stagger
+        self._tick_fn = slot_decode_fn(model)
+        self._prefill = jax.jit(
+            lambda params, caches, prompt: prefill_tokens(
+                model.decode_step, params, caches, prompt
+            )
+        )
+        pool0 = init_slot_pool(model, slots, ctx)
+        self.pools = [pool0 for _ in range(n_replicas)]
+        self.cur_tok = [
+            jnp.zeros((slots, 1, 1), jnp.int32) for _ in range(n_replicas)
+        ]
+        self.active: List[List[Optional[Dict]]] = [
+            [None] * slots for _ in range(n_replicas)
+        ]
+        self.params: List = [None] * n_replicas
+        self.version = [0] * n_replicas
+        self.staleness = [0] * n_replicas
+
+    def refresh(self, store: VersionStore) -> None:
+        """Re-pin every replica against a fresh ring snapshot: replica i
+        serves ``latest - i * stagger`` (clipped to the retained window),
+        so a staggered pool covers a spread of stalenesses. In-flight
+        streams keep decoding — their KV caches already embed the version
+        they prefilled under, so only *new* joins see the new pin."""
+        for i in range(self.n_replicas):
+            read = store.read(store.latest - i * self.stagger)
+            self.params[i] = read.params
+            self.version[i] = int(read.read_ver)
+            self.staleness[i] = int(read.staleness)
+
+    def load(self) -> np.ndarray:
+        """(R,) float32 in-flight streams per replica — the router's score."""
+        return np.asarray(
+            [sum(s is not None for s in a) for a in self.active], np.float32
+        )
+
+    def has_free(self, replica: int) -> bool:
+        return any(s is None for s in self.active[replica])
+
+    def total_free(self) -> int:
+        return sum(s is None for a in self.active for s in a)
+
+    def join(self, replica: int, req: Request, tick: int):
+        """Admit ``req`` on ``replica``: prefill its prompt into a fresh
+        batch-1 cache, emit the first token, and (unless the request is
+        already complete) write the cache into a free slot. Returns a
+        ``StreamResult`` when the request finishes at join (gen_len == 1),
+        else None. Caller must check ``has_free`` first."""
+        slot = self.active[replica].index(None)
+        caches = self.model.init_decode_caches(1, self.ctx)
+        logits, one = self._prefill(
+            self.params[replica], caches, jnp.asarray(req.prompt)[None, :]
+        )
+        first = int(jnp.argmax(logits[0, -1]))
+        stream = {
+            "rid": req.rid,
+            "arrival": req.tick,
+            "first_tick": tick,
+            "tokens": [first],
+            "remaining": req.gen_len - 1,
+            "version": self.version[replica],
+            "staleness": self.staleness[replica],
+        }
+        if stream["remaining"] == 0:
+            return self._result(replica, stream, tick)
+        self.pools[replica] = write_slot(self.pools[replica], slot, one)
+        self.cur_tok[replica] = (
+            self.cur_tok[replica].at[slot].set(jnp.int32(first))
+        )
+        self.active[replica][slot] = stream
+        return None
+
+    def decode_tick(self, tick: int) -> List[StreamResult]:
+        """One vmapped decode step per busy replica: every slot advances
+        one token; active streams record theirs, finished streams evict."""
+        done: List[StreamResult] = []
+        for i in range(self.n_replicas):
+            if not any(s is not None for s in self.active[i]):
+                continue
+            logits, self.pools[i] = self._tick_fn(
+                self.params[i], self.pools[i], self.cur_tok[i]
+            )
+            nxt = jnp.argmax(logits[:, :, -1, :], axis=-1)  # (S, 1)
+            self.cur_tok[i] = nxt[:, :, None].astype(jnp.int32)
+            host_next = np.asarray(nxt)
+            for s, stream in enumerate(self.active[i]):
+                if stream is None:
+                    continue
+                stream["tokens"].append(int(host_next[s, 0]))
+                stream["remaining"] -= 1
+                if stream["remaining"] == 0:
+                    done.append(self._result(i, stream, tick))
+                    self.active[i][s] = None
+        return done
+
+    def _result(self, replica: int, stream: Dict, tick: int) -> StreamResult:
+        return StreamResult(
+            rid=stream["rid"],
+            replica=replica,
+            version=stream["version"],
+            staleness=stream["staleness"],
+            arrival_tick=stream["arrival"],
+            first_token_tick=stream["first_tick"],
+            done_tick=tick,
+            tokens=stream["tokens"],
+        )
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate serving metrics for one loop run."""
+
+    results: List[StreamResult]
+    ticks: int
+    decisions: int
+    rejections: int
+    queue_left: int
+    tokens_out: int
+    ttft_ticks_mean: float
+    staleness_mean: float
+    staleness_max: int
+    decode_wall_s: float
+    tok_s: float
+    serve_stats: Dict  # fleet + per-replica E[X]/Var[X] over decisions
+
+    def summary(self) -> str:
+        ss = self.serve_stats
+        return (
+            f"served {len(self.results)} streams / {self.tokens_out} tokens "
+            f"in {self.ticks} ticks ({self.tok_s:.0f} tok/s decode) | "
+            f"ttft={self.ttft_ticks_mean:.2f} ticks | "
+            f"staleness mean={self.staleness_mean:.2f} max={self.staleness_max} | "
+            f"routing Var[X]={ss['var_X']:.3f} E[X]={ss['mean_X']:.3f} "
+            f"({self.decisions} decisions, {self.rejections} rejected)"
+        )
+
+
+def run_serve_loop(
+    model,
+    store: VersionStore,
+    requests: List[Request],
+    *,
+    router="round_robin",
+    router_kwargs: Optional[Dict] = None,
+    n_replicas: int = 2,
+    slots: int = 4,
+    ctx: Optional[int] = None,
+    ticks: Optional[int] = None,
+    stagger: int = 1,
+    seed: int = 0,
+    pool: Optional[ReplicaPool] = None,
+) -> ServeReport:
+    """Drive the continuous-batching loop over an open-loop request trace.
+
+    Per tick: append the tick's arrivals to the FIFO queue; while free
+    slots remain, ask the router for the head request's replica (one
+    accumulator epoch per decision — a rejection, or a pick of a full
+    replica, ends admission for the tick); then advance every busy
+    replica one vmapped decode step. ``pool`` reuses an existing
+    ``ReplicaPool`` (compiled ticks and in-flight streams survive across
+    calls — pass the same pool between training chunks); otherwise one is
+    built and pinned from ``store``.
+    """
+    requests = sorted(requests, key=lambda r: (r.tick, r.rid))
+    if ctx is None:
+        ctx = max((len(r.prompt) + r.gen_len for r in requests), default=8)
+    if ticks is None:
+        last = requests[-1].tick if requests else 0
+        ticks = last + sum(r.gen_len for r in requests) + 8
+    if pool is None:
+        pool = ReplicaPool(model, n_replicas, slots, ctx, stagger=stagger)
+        pool.refresh(store)
+    rt = router if isinstance(router, Router) else make_router(
+        router, pool.n_replicas, **(router_kwargs or {})
+    )
+    key = jax.random.PRNGKey(seed)
+    k_init, k_dec = jax.random.split(key)
+    rstate = rt.init(k_init, pool.n_replicas)
+    acc = init_replica_accum(pool.n_replicas)
+    upd = jax.jit(update_replica_accum)
+    no_assign = jnp.zeros((pool.n_replicas,), jnp.bool_)
+
+    queue: collections.deque = collections.deque()
+    pending = collections.deque(requests)
+    results: List[StreamResult] = []
+    decisions = rejections = 0
+    decode_wall = 0.0
+    t = 0
+    for t in range(ticks):
+        while pending and pending[0].tick <= t:
+            queue.append(pending.popleft())
+        # --- admission: one router decision per queued head request
+        while queue and pool.total_free() > 0:
+            req = queue[0]
+            ridx, rstate = rt.step(
+                rstate, jnp.asarray(pool.load()),
+                jax.random.fold_in(k_dec, decisions),
+            )
+            decisions += 1
+            ridx = int(ridx)
+            if ridx >= 0 and pool.has_free(ridx):
+                acc = upd(
+                    acc, no_assign.at[ridx].set(True)
+                )
+                queue.popleft()
+                res = pool.join(ridx, req, t)
+                if res is not None:
+                    results.append(res)
+            else:
+                # rejected (or full replica picked): the epoch still
+                # advances every replica's age chain; head-of-line waits
+                acc = upd(acc, no_assign)
+                rejections += 1
+                break
+        # --- decode: every busy replica advances one token
+        t0 = time.perf_counter()
+        results.extend(pool.decode_tick(t))
+        decode_wall += time.perf_counter() - t0
+        if not pending and not queue and pool.total_free() == pool.n_replicas * pool.slots:
+            break
+
+    tokens_out = sum(len(r.tokens) for r in results)
+    ttfts = [r.ttft_ticks for r in results]
+    stal = [r.staleness for r in results]
+    return ServeReport(
+        results=results,
+        ticks=t + 1,
+        decisions=decisions,
+        rejections=rejections,
+        queue_left=len(queue) + len(pending),
+        tokens_out=tokens_out,
+        ttft_ticks_mean=float(np.mean(ttfts)) if ttfts else float("nan"),
+        staleness_mean=float(np.mean(stal)) if stal else float("nan"),
+        staleness_max=int(max(stal)) if stal else 0,
+        decode_wall_s=decode_wall,
+        tok_s=tokens_out / decode_wall if decode_wall > 0 else float("nan"),
+        serve_stats=replica_stats_from_accum(acc),
+    )

@@ -1,0 +1,172 @@
+"""Request routers: which replica admits the next request.
+
+A router is the serving-tier analogue of a selection policy — a pair of
+pure functions wrapped in a ``Router`` record:
+
+    state = router.init(key, n_replicas)
+    replica, state = router.step(state, load, key)   # replica: () int32
+
+``load`` is the (R,) float32 in-flight load per replica (occupied slots,
+queue depth — whatever the pool scores with); ``replica`` is the chosen
+replica index, or ``-1`` when the router rejects the admission this
+decision (the request stays queued). Every ``step`` call is one decision
+epoch: the paper's load metric X counts decisions between subsequent
+assignments of a replica, so the Markov router's closed-form Var[X]
+(``load_metric.optimal_var(R, 1, m)``) applies verbatim with n := R,
+k := 1.
+
+Routers are registry entries, not loop forks (mirrors
+``repro.topo.register_topology`` / ``repro.engine.register_policy``):
+
+    from repro.serve import register_router
+
+    @register_router("my_router")
+    def _make(n_replicas, **kw):
+        return Router("my_router", init, step)
+
+Built-ins:
+  * ``round_robin``  — cursor over replicas, ignores load (Var[X] = 0).
+  * ``least_loaded`` — argmin of the load vector, lowest index on ties.
+  * ``markov``       — the paper's decentralized age-dependent admission
+                       rule: each replica *independently* draws
+                       willingness ~ Bernoulli(p_{min(age, m)}) from the
+                       same chain as ``core.selection.make_markov`` (on a
+                       1-replica pool the admission sequence is bit-for-bit
+                       the policy's selection sequence); the request goes
+                       to the least-loaded willing replica, or is rejected
+                       when none is willing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import selection
+
+
+@dataclasses.dataclass(frozen=True)
+class Router:
+    name: str
+    init: Callable  # (key, n_replicas) -> state
+    step: Callable  # (state, load, key) -> (replica () int32; -1 = reject, state)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ROUTERS: Dict[str, Callable] = {}
+
+
+def register_router(name: str) -> Callable:
+    """Decorator: register ``factory(n_replicas, **kw) -> Router``."""
+
+    def deco(factory: Callable) -> Callable:
+        if name in _ROUTERS:
+            raise ValueError(f"router {name!r} already registered")
+        _ROUTERS[name] = factory
+        return factory
+
+    return deco
+
+
+def make_router(name: str, n_replicas: int, **kw) -> Router:
+    """Construct a registered router by name."""
+    try:
+        factory = _ROUTERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown router {name!r}; registered: {sorted(_ROUTERS)}"
+        ) from None
+    return factory(n_replicas, **kw)
+
+
+def router_names() -> Tuple[str, ...]:
+    return tuple(sorted(_ROUTERS))
+
+
+# ---------------------------------------------------------------------------
+# Built-ins
+# ---------------------------------------------------------------------------
+
+
+def make_round_robin(n_replicas: int) -> Router:
+    """Deterministic cursor: decision d goes to replica d % R. Every
+    replica's assignment gap is exactly R — Var[X] = 0, the serving-tier
+    analogue of the ``round_robin`` selection policy."""
+
+    def init(key, r=n_replicas):
+        return {"cursor": jnp.zeros((), jnp.int32)}
+
+    def step(state, load, key):
+        idx = (state["cursor"] % n_replicas).astype(jnp.int32)
+        return idx, {"cursor": state["cursor"] + 1}
+
+    return Router("round_robin", init, step)
+
+
+def make_least_loaded(n_replicas: int) -> Router:
+    """Greedy: the replica with the least in-flight load (lowest index on
+    ties). Centralized — it reads the whole load vector, the admission
+    analogue of the ``oldest_age`` top-k policy."""
+
+    def init(key, r=n_replicas):
+        return {}
+
+    def step(state, load, key):
+        return jnp.argmin(load).astype(jnp.int32), state
+
+    return Router("least_loaded", init, step)
+
+
+def make_markov_admission(
+    n_replicas: int,
+    m: int = 10,
+    probs=None,
+    steady_start: bool = True,
+    target_gap: Optional[float] = None,
+) -> Router:
+    """The paper's age-dependent Markov rule as an admission policy.
+
+    Each replica runs its own age chain (age = decisions since it last
+    took a request) and draws willingness ~ Bernoulli(p_{min(age, m)}) —
+    zero coordination, exactly ``core.selection.make_markov``'s draw over
+    n := R replicas, k := 1 admission per decision (or ``probs`` /
+    ``target_gap`` for explicit chains; ``target_gap`` is the desired
+    E[X] in decisions, Theorem 2's n/k). The request is routed to the
+    least-loaded willing replica; when no replica is willing the decision
+    returns -1 and the request waits. On a degenerate 1-replica pool the
+    admit/reject sequence is bit-for-bit the policy's selection sequence
+    (pinned by ``tests/test_serve.py``).
+    """
+    if probs is None and target_gap is not None:
+        import numpy as np
+
+        from repro.core import load_metric
+
+        probs = np.asarray(
+            load_metric.optimal_probs_for_mean(float(target_gap), m)
+        )
+    policy = selection.make_markov(
+        n_replicas, 1, m, probs=probs, steady_start=steady_start
+    )
+
+    def init(key, r=n_replicas):
+        return policy.init(key, r)
+
+    def step(state, load, key):
+        willing, state = policy.step(state, key)
+        score = jnp.where(willing, load, jnp.inf)
+        idx = jnp.argmin(score).astype(jnp.int32)
+        return jnp.where(jnp.any(willing), idx, -1).astype(jnp.int32), state
+
+    return Router("markov", init, step)
+
+
+register_router("round_robin")(make_round_robin)
+register_router("least_loaded")(make_least_loaded)
+register_router("markov")(make_markov_admission)
+
+ROUTER_NAMES = router_names()

@@ -1,0 +1,82 @@
+"""Multi-version model store over the async engine's version ring.
+
+The buffered async engine already retains the last ``max_versions``
+global models in a ring buffer (``state["hist"]``, slot ``v % H`` holds
+version ``v``) so stale clients can train from their dispatch-time
+model. That ring *is* a multi-version model store; ``VersionStore``
+wraps one ring snapshot behind a read API with explicit staleness
+accounting so the serving tier can pin replicas to retained versions
+while training keeps advancing the ring underneath.
+
+``read`` applies the engine's exact clipping semantics (a requested
+version older than the ring serves the oldest retained model — the same
+``jnp.clip`` the engine applies to dispatch versions), and reports both
+the version actually served and its staleness relative to the ring head.
+The snapshot holds device arrays by reference: constructing a store
+never pulls parameters to the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VersionRead(NamedTuple):
+    """One resolved read: the served parameters, the version they carry,
+    and its age relative to the newest version in the ring."""
+
+    params: Any
+    read_ver: jnp.ndarray  # () int32 — version actually served
+    staleness: jnp.ndarray  # () int32 — latest - read_ver
+
+
+@dataclasses.dataclass(frozen=True)
+class VersionStore:
+    """Read API over a ring of the last ``max_versions`` global models.
+
+    ``hist`` is any pytree whose leaves carry a leading ``(H,)`` ring
+    axis with version ``v`` in slot ``v % H``; ``version`` is the newest
+    version present. Both come straight out of
+    ``AsyncEngine.ring_snapshot(state)`` — a store is a cheap value
+    object over live engine state, rebuilt after every training chunk.
+    """
+
+    hist: Any
+    version: jnp.ndarray
+    max_versions: int
+
+    @classmethod
+    def from_engine(cls, engine, state) -> "VersionStore":
+        return cls(*engine.ring_snapshot(state))
+
+    @property
+    def latest(self) -> int:
+        return int(self.version)
+
+    @property
+    def oldest_retained(self) -> int:
+        """Oldest version still resident in the ring. Before the ring
+        wraps for the first time every slot above ``version`` still holds
+        the init params, so retention starts at version 0."""
+        return max(self.latest - (self.max_versions - 1), 0)
+
+    def retained_versions(self) -> List[int]:
+        return list(range(self.oldest_retained, self.latest + 1))
+
+    def read(self, ver) -> VersionRead:
+        """Serve version ``ver``, clipped to the retained window.
+
+        Same semantics as the engine's dispatch-version read: requests
+        for versions that fell off the ring (staleness >= H) get the
+        oldest retained model; requests newer than the head get the
+        head. ``staleness`` is the age of the version actually served.
+        """
+        h = self.max_versions
+        latest = jnp.asarray(self.version, jnp.int32)
+        v = jnp.asarray(ver, jnp.int32)
+        read_ver = jnp.clip(v, jnp.maximum(latest - (h - 1), 0), latest)
+        params = jax.tree.map(lambda leaf: leaf[read_ver % h], self.hist)
+        return VersionRead(params, read_ver, latest - read_ver)

@@ -8,6 +8,12 @@ where its fairness and no-coordination claims become systems claims:
 stragglers, dropouts, and availability windows all shift the realized
 selection process.
 """
+from repro.sim.arrivals import (  # noqa: F401
+    ArrivalProcess,
+    sample_arrival_counts,
+    sample_gen_lens,
+    sample_requests,
+)
 from repro.sim.latency import (  # noqa: F401
     PROFILES,
     LatencyProfile,

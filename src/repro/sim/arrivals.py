@@ -1,0 +1,97 @@
+"""Open-loop request arrival process for the serving tier.
+
+An ``ArrivalProcess`` describes synthetic inference traffic the way
+``LatencyProfile`` describes fleet wall-clock behaviour:
+
+  * arrivals per tick ~ Poisson(rate)            (open loop: demand does
+                                                  not wait for capacity)
+  * generation length ~ gen_len * LogNormal(0, spread), clipped to
+                        [1, max(1, 2 * gen_len)]
+  * prompt tokens     ~ Uniform(vocab)
+
+``from_profile`` derives the length spread from a latency profile's
+heterogeneity (``compute_sigma + hetero``): fleets with heavy-tailed
+device behaviour get matching heavy-tailed request sizes, the uniform
+profile gets fixed-size requests. All samplers are pure ``jax.random``
+functions, so a whole trace is drawn up front and the serving loop stays
+deterministic under a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.latency import LatencyProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    name: str
+    rate: float  # mean requests per scheduler tick (Poisson)
+    prompt_len: int  # prompt tokens per request
+    gen_len: int  # median tokens to generate
+    len_spread: float = 0.0  # lognormal sigma of the generation length
+
+    def __post_init__(self) -> None:
+        if self.rate < 0:
+            raise ValueError(f"rate must be >= 0, got {self.rate}")
+        if self.prompt_len < 1 or self.gen_len < 1:
+            raise ValueError("prompt_len and gen_len must be >= 1")
+
+
+def from_profile(
+    profile: LatencyProfile, rate: float, prompt_len: int, gen_len: int
+) -> ArrivalProcess:
+    """Traffic shaped by a fleet latency profile: the request-length
+    spread inherits the profile's compute heterogeneity."""
+    return ArrivalProcess(
+        name=f"poisson[{profile.name}]",
+        rate=rate,
+        prompt_len=prompt_len,
+        gen_len=gen_len,
+        len_spread=profile.compute_sigma + profile.hetero,
+    )
+
+
+def sample_arrival_counts(key, proc: ArrivalProcess, ticks: int) -> jnp.ndarray:
+    """(ticks,) int32 — requests arriving at each tick."""
+    return jax.random.poisson(key, proc.rate, (ticks,)).astype(jnp.int32)
+
+
+def sample_gen_lens(key, proc: ArrivalProcess, n: int) -> jnp.ndarray:
+    """(n,) int32 generation lengths ~ gen_len * LogNormal(0, spread),
+    clipped to [1, max(1, 2 * gen_len)] so one giant request cannot pin a
+    slot for an unbounded run."""
+    if proc.len_spread == 0.0:
+        return jnp.full((n,), proc.gen_len, jnp.int32)
+    ln = jnp.exp(proc.len_spread * jax.random.normal(key, (n,)))
+    return jnp.clip(
+        jnp.round(proc.gen_len * ln), 1, max(1, 2 * proc.gen_len)
+    ).astype(jnp.int32)
+
+
+def sample_requests(key, proc: ArrivalProcess, ticks: int, vocab: int) -> List:
+    """Materialize a whole request trace: a list of
+    ``repro.serve.Request`` covering ``ticks`` scheduler ticks."""
+    from repro.serve.loop import Request
+
+    k_cnt, k_len, k_tok = jax.random.split(key, 3)
+    counts = np.asarray(sample_arrival_counts(k_cnt, proc, ticks))
+    total = int(counts.sum())
+    lens = np.asarray(sample_gen_lens(k_len, proc, total))
+    prompts = np.asarray(
+        jax.random.randint(k_tok, (total, proc.prompt_len), 0, vocab, jnp.int32)
+    )
+    out, rid = [], 0
+    for t, c in enumerate(counts):
+        for _ in range(int(c)):
+            out.append(
+                Request(rid=rid, tick=t, prompt=prompts[rid],
+                        gen_len=int(lens[rid]))
+            )
+            rid += 1
+    return out

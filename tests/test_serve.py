@@ -1,0 +1,303 @@
+"""The serving tier: router registry + Markov admission equivalence,
+replica-axis Var[X] accumulators vs a NumPy reference, version-ring read
+clipping (staleness >= H), and bit-for-bit stream isolation of the
+continuous-batching pool under join/evict churn.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.paper_cnn import MNIST_CNN
+from repro.core import load_metric, selection
+from repro.data.synthetic import make_image_dataset
+from repro.engine import AsyncEngine, RunConfig
+from repro.models import factory
+from repro.serve import (
+    Request,
+    VersionStore,
+    make_router,
+    router_names,
+    run_serve_loop,
+)
+from repro.serve.batching import prefill_tokens
+from repro.serve.router import register_router
+
+ARCH = get_arch("tinyllama-1.1b").reduced()
+
+
+@pytest.fixture(scope="module")
+def lm():
+    model = factory.build(ARCH)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _store(params, h=4, latest=3):
+    """Synthetic ring: slot v % h carries version v's params (scaled so
+    every retained version is distinguishable)."""
+    lo = max(latest - (h - 1), 0)
+    slot_ver = [0] * h
+    for v in range(lo, latest + 1):
+        slot_ver[v % h] = v
+    hist = jax.tree.map(
+        lambda p: jnp.stack([p * (1.0 + 0.01 * v) for v in slot_ver]), params
+    )
+    return VersionStore(hist, jnp.asarray(latest, jnp.int32), h)
+
+
+# ---------------------------------------------------------------------------
+# (1) router registry + Markov admission == core.selection
+# ---------------------------------------------------------------------------
+
+
+def test_router_registry_roundtrip():
+    names = router_names()
+    assert {"round_robin", "least_loaded", "markov"} <= set(names)
+    key = jax.random.PRNGKey(0)
+    load = jnp.zeros((3,), jnp.float32)
+    for name in names:
+        router = make_router(name, 3)
+        assert router.name == name
+        state = router.init(key, 3)
+        idx, state = router.step(state, load, jax.random.fold_in(key, 1))
+        assert idx.dtype == jnp.int32
+        assert -1 <= int(idx) < 3
+    with pytest.raises(ValueError, match="unknown router"):
+        make_router("nope", 3)
+    register_router("_test_dummy")(lambda r: make_router("round_robin", r))
+    with pytest.raises(ValueError, match="already registered"):
+        register_router("_test_dummy")(lambda r: None)
+
+
+def test_markov_router_bitmatches_selection_policy():
+    """Degenerate 1-replica pool: the router's admit/reject sequence is
+    bit-for-bit the Markov selection policy's draw under the same keys —
+    the serving tier reuses the paper's admission rule, not a lookalike."""
+    probs = np.array([0.3, 0.6, 1.0], np.float32)
+    router = make_router("markov", 1, m=2, probs=probs)
+    policy = selection.make_markov(1, 1, 2, probs=probs)
+    key = jax.random.PRNGKey(42)
+    rstate = router.init(key, 1)
+    pstate = policy.init(key, 1)
+    load = jnp.zeros((1,), jnp.float32)
+    admitted, selected = [], []
+    for t in range(300):
+        k = jax.random.fold_in(key, t)
+        idx, rstate = router.step(rstate, load, k)
+        sel, pstate = policy.step(pstate, k)
+        admitted.append(int(idx) == 0)
+        selected.append(bool(sel[0]))
+    assert admitted == selected
+    rate = np.mean(admitted)
+    assert rate == pytest.approx(
+        load_metric.selection_rate(probs), abs=0.1
+    )
+
+
+def test_markov_router_routes_to_least_loaded_willing():
+    router = make_router("markov", 4, m=2, probs=np.array([1.0, 1.0, 1.0]))
+    key = jax.random.PRNGKey(0)
+    state = router.init(key, 4)
+    # all replicas willing (p == 1 everywhere): the loaded ones lose
+    load = jnp.asarray([3.0, 1.0, 0.0, 2.0])
+    idx, _ = router.step(state, load, jax.random.fold_in(key, 1))
+    assert int(idx) == 2
+
+
+# ---------------------------------------------------------------------------
+# (2) replica-axis accumulators vs NumPy reference
+# ---------------------------------------------------------------------------
+
+
+def test_replica_accum_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    T, R = 400, 5
+    # routing decisions: mostly one-hot assignments, some rejections
+    hist = np.zeros((T, R), bool)
+    for t in range(T):
+        if rng.random() < 0.85:
+            hist[t, rng.integers(R)] = True
+
+    acc = load_metric.init_replica_accum(R)
+
+    def body(acc, row):
+        return load_metric.update_replica_accum(acc, row), None
+
+    acc, _ = jax.lax.scan(body, acc, jnp.asarray(hist))
+    stats = load_metric.replica_stats_from_accum(acc)
+
+    gaps = load_metric.peak_ages_from_history(hist)
+    assert stats["num_samples"] == gaps.size
+    assert stats["decisions"] == T
+    np.testing.assert_allclose(stats["mean_X"], gaps.mean(), rtol=1e-6)
+    np.testing.assert_allclose(stats["var_X"], gaps.var(), rtol=1e-5)
+    for r in range(R):
+        g = np.diff(np.flatnonzero(hist[:, r]))
+        assert stats["replica_num_samples"][r] == g.size
+        if g.size:
+            np.testing.assert_allclose(
+                stats["replica_mean_X"][r], g.mean(), rtol=1e-6
+            )
+            np.testing.assert_allclose(
+                stats["replica_var_X"][r], g.var(), rtol=1e-5, atol=1e-5
+            )
+
+
+# ---------------------------------------------------------------------------
+# (satellite) version-ring read clipping
+# ---------------------------------------------------------------------------
+
+
+def test_version_store_read_clipping(lm):
+    _, params = lm
+    store = _store(params, h=4, latest=10)  # retained: 7..10
+    assert store.oldest_retained == 7
+    assert store.retained_versions() == [7, 8, 9, 10]
+    # in-window reads serve the exact version
+    for v in (7, 8, 9, 10):
+        read = store.read(v)
+        assert int(read.read_ver) == v
+        assert int(read.staleness) == 10 - v
+    # versions that fell off the ring (staleness >= H) clip to the oldest
+    # retained model; staleness reports the served version's true age
+    for v in (6, 3, 0, -2):
+        read = store.read(v)
+        assert int(read.read_ver) == 7
+        assert int(read.staleness) == 3
+    # futures clip to the head
+    assert int(store.read(99).read_ver) == 10
+    # served params are the pinned slot's, bitwise
+    want = jax.tree.map(lambda p: p * 1.07, params)  # slot of version 7
+    got = store.read(0).params
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_version_store_before_first_wrap(lm):
+    _, params = lm
+    store = _store(params, h=4, latest=1)  # ring not yet wrapped
+    assert store.oldest_retained == 0
+    assert int(store.read(-3).read_ver) == 0
+    assert int(store.read(5).read_ver) == 1
+
+
+SMALL_CNN = dataclasses.replace(
+    MNIST_CNN, name="paper-cnn-mnist-small", image_size=16,
+    conv_channels=(8, 16), fc_width=64,
+)
+
+
+def test_ring_snapshot_matches_engine_state():
+    """The store's head read is the engine's live params, bitwise, and
+    dispatch versions older than the ring resolve to the oldest retained
+    slot — the exact clipping the training step applies."""
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        "mnist-small", 10, 16, 1, 600, 500, seed=0, difficulty=0.8
+    )
+    task = make_cnn_task(SMALL_CNN, train, test, n_clients=12)
+    cfg = RunConfig(
+        mode="async", n_clients=12, k=3, m=4, policy="markov", rounds=6,
+        local_epochs=1, batch_size=10, eval_every=6, max_versions=4,
+        collect_history=False,
+    )
+    engine = AsyncEngine(task, cfg)
+    state = engine.init()
+    state, _ = engine.run_chunk(state, 0, 6, False)
+    store = VersionStore.from_engine(engine, state)
+    assert store.max_versions == 4
+    latest = int(state["version"])
+    assert store.latest == latest
+    head = store.read(latest)
+    assert int(head.staleness) == 0
+    for a, b in zip(
+        jax.tree.leaves(head.params), jax.tree.leaves(state["params"])
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    old = store.read(latest - 10)
+    assert int(old.read_ver) == max(latest - 3, 0)
+
+
+# ---------------------------------------------------------------------------
+# (3) continuous batching: join/evict churn preserves streams bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def _solo_decode(model, params, prompt, gen_len, ctx):
+    """Reference: the request decoded alone on a plain (unvmapped)
+    batch-1 decode path."""
+    caches = model.init_decode_caches(1, ctx)
+    logits, caches = prefill_tokens(
+        model.decode_step, params, caches, jnp.asarray(prompt)[None, :]
+    )
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    step = jax.jit(model.decode_step)
+    for _ in range(gen_len - 1):
+        logits, caches = step(params, caches, jnp.full((1, 1), tok, jnp.int32))
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+    return out
+
+
+def test_join_evict_streams_bitwise_vs_solo(lm):
+    model, params = lm
+    store = _store(params, h=4, latest=3)
+    key = jax.random.PRNGKey(7)
+    reqs = [
+        Request(
+            rid=i, tick=i,
+            prompt=np.asarray(
+                jax.random.randint(
+                    jax.random.fold_in(key, i), (5,), 0, ARCH.vocab_size
+                )
+            ),
+            gen_len=3 + (i % 3),
+        )
+        for i in range(6)
+    ]
+    ctx = max(len(r.prompt) + r.gen_len for r in reqs)
+    report = run_serve_loop(
+        model, store, reqs, router="round_robin", n_replicas=2, slots=2,
+        ctx=ctx, seed=0,
+    )
+    assert len(report.results) == len(reqs)
+    assert report.queue_left == 0
+    # staggered pins: replica 0 serves the head, replica 1 one behind
+    assert {r.staleness for r in report.results} == {0, 1}
+    # streams joined and evicted at different ticks around each other;
+    # every stream's tokens must equal its solo decode, bit for bit
+    for res in report.results:
+        req = reqs[res.rid]
+        solo = _solo_decode(
+            model, store.read(res.version).params, req.prompt, req.gen_len,
+            ctx,
+        )
+        assert res.tokens == solo, f"stream {res.rid} diverged"
+    # round_robin routing is the Var[X] = 0 reference over replicas
+    assert report.serve_stats["var_X"] == 0.0
+    assert report.serve_stats["mean_X"] == 2.0
+
+
+def test_prefill_scan_matches_per_token_loop(lm):
+    """Pins the launch/serve.py satellite: scanned prefill is bit-for-bit
+    the Python per-token decode loop."""
+    model, params = lm
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(3), (2, 6), 0, ARCH.vocab_size
+    )
+    ctx = 16
+    lg_scan, c_scan = prefill_tokens(
+        model.decode_step, params, model.init_decode_caches(2, ctx), prompts
+    )
+    c_loop = model.init_decode_caches(2, ctx)
+    step = jax.jit(model.decode_step)
+    for t in range(prompts.shape[1]):
+        lg_loop, c_loop = step(params, c_loop, prompts[:, t : t + 1])
+    np.testing.assert_array_equal(np.asarray(lg_scan), np.asarray(lg_loop))
+    for a, b in zip(jax.tree.leaves(c_scan), jax.tree.leaves(c_loop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
