@@ -1,0 +1,147 @@
+"""Fault injection & graceful degradation benchmarks.
+
+Two questions, one section:
+
+  (a) what does arming the chaos stack cost per engine step — faults
+      (dropout + corrupt) and deadline re-dispatch riding the donated
+      scan carry vs the identical fault-free engine;
+  (b) the convergence-vs-fault-rate row the tentpole promises: under a
+      pinned model-replacement corruption of the cohort, plain fedavg
+      loses the accuracy the robust aggregation registry entries
+      (trimmed_mean / coordinate_median) recover. Final eval losses land
+      in the derived column so the committed baseline carries the
+      evidence.
+
+The replacement attack (sign-flipped, boosted deltas) is the clean one
+for this comparison: it *reverses* the direction of the mean aggregate —
+damage clipping cannot repair and a minority of honest rounds cannot
+outvote — while order statistics discard it outright; ``trim`` is set
+above the corruption rate so the trimmed band covers the attackers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNN_CONFIGS
+from repro.data.synthetic import make_image_dataset
+from repro.engine import RunConfig, SyncEngine, make_engine, run_engine
+from repro.fl import make_cnn_task
+
+# pinned attack for the convergence rows: a model-replacement attacker
+# hits 25% of every cohort, submitting its delta sign-flipped AND boosted
+# (scale_attack factor -3) — the honest 75% mean is cancelled, so plain
+# fedavg stalls and drifts (at -4 it diverges to NaN outright). The
+# trimmed mean discards the 35% band per coordinate, comfortably above
+# the corruption rate.
+ATTACK_RATE = 0.25
+ATTACK_FACTOR = -3.0
+TRIM = 0.35
+
+
+def _mini_task(seed: int = 0):
+    base = CNN_CONFIGS["paper-cnn-mnist"]
+    cnn = dataclasses.replace(
+        base, name=base.name + "-faults-mini", image_size=16,
+        conv_channels=(8, 16), fc_width=64,
+    )
+    train, test = make_image_dataset(
+        "mnist-faults-mini", base.num_classes, 16, base.channels,
+        2000, 1000, seed=seed, difficulty=0.9,
+    )
+    return make_cnn_task(cnn, train, test, 100, seed=seed)
+
+
+def _time_chunks(engines, chunk: int, trials: int):
+    """Per-step medians, trials interleaved (shared boxes drift)."""
+    snaps = []
+    for eng in engines:
+        state = eng.init()
+        state, _ = eng.run_chunk(state, 0, chunk, False)  # compile + warm
+        jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+        snaps.append(state)
+    times = [[] for _ in engines]
+    for _ in range(trials):
+        for i, eng in enumerate(engines):
+            st = jax.tree.map(jnp.copy, snaps[i])  # run_chunk donates
+            t0 = time.time()
+            _, aux = eng.run_chunk(st, chunk, chunk, False)
+            _ = jax.device_get(aux)
+            times[i].append((time.time() - t0) / chunk * 1e6)
+    return [float(np.median(t)) for t in times]
+
+
+def run(csv_rows, rounds: int = 12, trials: int = 3):
+    task = _mini_task()
+
+    # --- (a) chaos overhead per async step -------------------------------
+    def acfg(**kw):
+        return RunConfig(
+            n_clients=100, k=15, m=10, policy="markov", rounds=64,
+            local_epochs=1, batch_size=10, eval_every=64, mode="async",
+            profile="mobile", collect_history=False, **kw,
+        )
+
+    calm = make_engine(task, acfg())
+    chaos = make_engine(task, acfg(
+        faults=("dropout", "corrupt"), fault_rate=0.1,
+        redispatch_timeout=30.0,
+    ))
+    print("\n== faults: chaos-stack overhead per async step "
+          "(n=100, dropout+corrupt @ 0.1 + re-dispatch) ==")
+    t_calm, t_chaos = _time_chunks([calm, chaos], chunk=8, trials=trials)
+    ratio = t_chaos / t_calm if t_calm else float("nan")
+    print(f"  calm  : {t_calm:9.1f}us/step")
+    print(f"  chaos : {t_chaos:9.1f}us/step ({ratio:.2f}x)")
+    csv_rows.append(("faults_step_n100_calm", t_calm, ""))
+    csv_rows.append(("faults_step_n100_chaos", t_chaos, f"{ratio:.3f}x"))
+
+    # --- (b) convergence under pinned replacement corruption -------------
+    print(f"\n== faults: convergence under a replacement attack "
+          f"(scale_attack x{ATTACK_FACTOR}, rate={ATTACK_RATE}, "
+          f"rounds={rounds}) — fedavg vs robust ==")
+
+    def converge(aggregator, aggregator_kwargs):
+        cfg = RunConfig(
+            n_clients=100, k=15, m=10, policy="markov", rounds=rounds,
+            local_epochs=2, batch_size=10,
+            eval_every=max(rounds // 4, 1),
+            aggregator=aggregator, aggregator_kwargs=aggregator_kwargs,
+            faults=("scale_attack",), fault_rate=ATTACK_RATE,
+            fault_kwargs={"scale_attack": {"factor": ATTACK_FACTOR}},
+        )
+        t0 = time.time()
+        res = run_engine(SyncEngine(task, cfg))
+        last = res.records[-1]
+        injected = res.load_stats.get("fault_scale_attack_injected", 0.0)
+        return last, time.time() - t0, injected
+
+    losses = {}
+    for name, agg, kw in (
+        ("fedavg", None, {}),
+        ("trimmed_mean", "trimmed_mean", {"trim": TRIM}),
+        ("coordinate_median", "coordinate_median", {}),
+    ):
+        last, dt, injected = converge(agg, kw)
+        losses[name] = last.eval_loss
+        print(f"  {name:18s}: eval_loss={last.eval_loss:.4f} "
+              f"acc={last.accuracy:.4f} "
+              f"({int(injected)} replacements injected, {dt:.1f}s)")
+        csv_rows.append((
+            f"faults_convergence_replacement_{name}", 0.0,
+            f"loss={last.eval_loss:.4f};acc={last.accuracy:.4f}",
+        ))
+    best = min(losses["trimmed_mean"], losses["coordinate_median"])
+    # a fedavg that diverged to NaN/inf lost by the widest possible margin
+    recovered = best < losses["fedavg"] or not np.isfinite(losses["fedavg"])
+    print(f"  robust {'recovers' if recovered else 'DOES NOT recover'}: "
+          f"best robust loss {best:.4f} vs fedavg {losses['fedavg']:.4f}")
+    csv_rows.append((
+        "faults_robust_recovers_replacement", 0.0,
+        f"{'yes' if recovered else 'NO'};fedavg={losses['fedavg']:.4f};"
+        f"robust={best:.4f}",
+    ))

@@ -31,6 +31,10 @@ REQUIRED_BASELINE_ROWS = (
     "async_engine_step_n262144_hier64x8",
     "async_engine_step_n262144_hier64x8_sharded8",
     "serve_tick_tinyllama-1.1b_r2s4",
+    # chaos stack: armed-fault step cost + the convergence-vs-corruption
+    # evidence row (robust aggregation recovering what fedavg loses)
+    "faults_step_n100_chaos",
+    "faults_robust_recovers_replacement",
 )
 
 
@@ -89,7 +93,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: variance,scheduler,kernels,convergence,"
-                         "roofline,async,sharded,topo,serve")
+                         "roofline,async,sharded,topo,serve,faults")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--out", default=None,
@@ -145,6 +149,10 @@ def main() -> None:
         from benchmarks import bench_serve
 
         bench_serve.run_serve(csv_rows)
+    if on("faults"):
+        from benchmarks import bench_faults
+
+        bench_faults.run(csv_rows, rounds=args.rounds)
     if on("roofline"):
         from benchmarks import bench_roofline
 

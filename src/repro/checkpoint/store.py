@@ -4,11 +4,23 @@ Saves arbitrary pytrees (model params, optimizer state, FL server state
 incl. scheduler ages — so a federated run can resume with its AoI state
 intact). Large leaves are split across multiple npz shards to bound file
 size; dtypes (incl. bfloat16, stored as uint16 bit patterns) round-trip.
+
+Typed PRNG keys (``jax.random.key`` leaves, e.g. the engines' ``k_run``
+carry entry) round-trip too: the raw key data is stored and the key impl
+name recorded in the manifest, so a mid-run engine carry — including its
+scan key — restores bit-for-bit and the run continues exactly where it
+crashed.
+
+Every shard's sha256 is recorded in the manifest and re-checked on load:
+a corrupted or truncated shard fails loudly (``ValueError``) instead of
+silently resuming from garbage.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import zipfile
 from typing import Any, Dict, Tuple
 
 import jax
@@ -30,6 +42,23 @@ def _key_str(path) -> str:
     return "/".join(parts)
 
 
+def _is_typed_key(leaf) -> bool:
+    try:
+        return jax.dtypes.issubdtype(
+            jnp.asarray(leaf).dtype, jax.dtypes.prng_key
+        )
+    except TypeError:
+        return False
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 def save_checkpoint(directory: str, tree: Any, step: int = 0) -> str:
     os.makedirs(directory, exist_ok=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -38,8 +67,20 @@ def save_checkpoint(directory: str, tree: Any, step: int = 0) -> str:
     shard_id, shard_bytes = 0, 0
     for path, leaf in leaves:
         name = _key_str(path)
-        arr = np.asarray(leaf)
-        entry = {"name": name, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        if _is_typed_key(leaf):
+            # typed PRNG key: store the raw key data, remember the impl
+            impl = str(jax.random.key_impl(leaf))
+            arr = np.asarray(jax.random.key_data(leaf))
+            entry = {
+                "name": name, "dtype": str(arr.dtype),
+                "shape": list(arr.shape), "prng_impl": impl,
+            }
+        else:
+            arr = np.asarray(leaf)
+            entry = {
+                "name": name, "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+            }
         if arr.dtype == jnp.bfloat16:
             arr = arr.view(np.uint16)
             entry["stored_as"] = "uint16_bf16"
@@ -63,8 +104,35 @@ def save_checkpoint(directory: str, tree: Any, step: int = 0) -> str:
 
 def _flush(directory, shard_id, arrays, manifest):
     fname = f"shard_{shard_id:04d}.npz"
-    np.savez(os.path.join(directory, fname), **arrays)
-    manifest["shards"].append(fname)
+    fpath = os.path.join(directory, fname)
+    np.savez(fpath, **arrays)
+    manifest["shards"].append({"file": fname, "sha256": _sha256(fpath)})
+
+
+def _shard_file(entry) -> str:
+    # pre-hash manifests stored shards as plain filenames
+    return entry["file"] if isinstance(entry, dict) else entry
+
+
+def _load_shard(directory: str, entry) -> Any:
+    fname = _shard_file(entry)
+    fpath = os.path.join(directory, fname)
+    if isinstance(entry, dict):
+        got = _sha256(fpath)
+        if got != entry["sha256"]:
+            raise ValueError(
+                f"checkpoint shard {fname} is corrupted: sha256 {got} != "
+                f"manifest {entry['sha256']} — refusing to restore"
+            )
+    try:
+        shard = np.load(fpath)
+        shard.files  # force the zip directory read
+        return shard
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise ValueError(
+            f"checkpoint shard {fname} is unreadable (truncated or "
+            f"corrupted): {e}"
+        ) from None
 
 
 def load_checkpoint(directory: str, like: Any) -> Tuple[Any, int]:
@@ -72,15 +140,15 @@ def load_checkpoint(directory: str, like: Any) -> Tuple[Any, int]:
     ShapeDtypeStructs)."""
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
-    shards = [
-        np.load(os.path.join(directory, fname)) for fname in manifest["shards"]
-    ]
-    by_name = {}
+    shards = [_load_shard(directory, e) for e in manifest["shards"]]
+    by_name, impl_by_name = {}, {}
     for e in manifest["leaves"]:
         arr = shards[e["shard"]][e["key"]]
         if e.get("stored_as") == "uint16_bf16":
             arr = arr.view(jnp.bfloat16)
         by_name[e["name"]] = arr
+        if "prng_impl" in e:
+            impl_by_name[e["name"]] = e["prng_impl"]
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for path, leaf in paths:
@@ -88,6 +156,17 @@ def load_checkpoint(directory: str, like: Any) -> Tuple[Any, int]:
         if name not in by_name:
             raise KeyError(f"checkpoint missing leaf {name}")
         arr = by_name[name]
+        if name in impl_by_name:
+            restored = jax.random.wrap_key_data(
+                jnp.asarray(arr), impl=impl_by_name[name]
+            )
+            if tuple(restored.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {name}: {restored.shape} vs "
+                    f"{leaf.shape}"
+                )
+            out.append(restored)
+            continue
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {name}: {arr.shape} vs {leaf.shape}")
         out.append(jnp.asarray(arr))

@@ -28,6 +28,7 @@ from repro.engine.registry import (  # noqa: F401
 )
 from repro.engine.serialize import dump_json, to_jsonable  # noqa: F401
 from repro.engine.aggregators import Aggregator, staleness_weight  # noqa: F401
+from repro.engine import robust  # noqa: F401  (registers robust aggregators)
 from repro.engine.config import (  # noqa: F401
     RoundRecord,
     RunConfig,

@@ -62,15 +62,29 @@ class Aggregator:
     accumulate: Callable  # (acc, updates, bases, weights) -> acc
     finalize: Callable  # (global_params, acc) -> new global_params
     additive: bool = False
+    # scalar telemetry names the accumulator carries under acc["stats"]
+    # (e.g. norm_clip's "clipped" count). Engines surface each as an
+    # ``agg_<name>`` counter in RunResult.load_stats; () (every
+    # non-robust built-in) adds no stats key and no per-step ops.
+    stat_names: tuple = ()
+
+
+def acc_stats(acc) -> dict:
+    """The scalar telemetry dict a finished accumulator carries (empty
+    for aggregators that declare no ``stat_names``). Stats live *inside*
+    the accumulator so they merge for free along every reduction path —
+    psum under cohort sharding, segment-sum up a tier DAG."""
+    return acc.get("stats", {}) if isinstance(acc, dict) else {}
 
 
 def cohort_sharded_apply(
     agg: Aggregator, mesh, axis: str, stacked_bases: bool = True
 ) -> Callable:
     """The aggregator seam's shard-local path for cohort-parallel
-    execution: ``apply(global_params, updates, bases, w) -> new params``
-    with the cohort axis of ``updates``/``w`` (and ``bases`` when
-    stacked) laid out over ``axis`` of ``mesh``.
+    execution: ``apply(global_params, updates, bases, w) -> (new params,
+    stats)`` with the cohort axis of ``updates``/``w`` (and ``bases``
+    when stacked) laid out over ``axis`` of ``mesh``; ``stats`` is the
+    merged accumulator's scalar telemetry (``acc_stats``).
 
     Each device runs ``agg.init``/``agg.accumulate`` over its own
     ``B/devices`` cohort slice, the accumulator pytrees are merged by one
@@ -109,7 +123,7 @@ def cohort_sharded_apply(
             in_specs=(P(), spec, spec if stacked_bases else P(), spec),
             out_specs=P(),
         )(g, updates, bases, w)
-        return agg.finalize(g, merged)
+        return agg.finalize(g, merged), acc_stats(merged)
 
     return apply
 

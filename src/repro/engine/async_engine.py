@@ -39,7 +39,7 @@ from repro.core.load_metric import (
     tier_stats_from_accum,
 )
 from repro.core.selection import Policy
-from repro.engine.aggregators import Aggregator
+from repro.engine.aggregators import Aggregator, acc_stats
 from repro.engine.chunk import ChunkRunner, dealias_pytree, run_key, step_once
 from repro.engine.config import RoundRecord, RunConfig, RunResult
 from repro.engine.registry import make_aggregator, make_policy
@@ -56,7 +56,8 @@ def _resolved_profile(profile) -> lat_mod.LatencyProfile:
     return lat_mod.get_profile(profile)
 
 
-def _init_stats(heartbeat: bool = False) -> Dict[str, jnp.ndarray]:
+def _init_stats(heartbeat: bool = False, redispatch: bool = False,
+                agg_stats: tuple = ()) -> Dict[str, jnp.ndarray]:
     z = jnp.zeros((), jnp.float32)
     out = {
         "wall_sx": z, "wall_sx2": z, "wall_cnt": z,  # X in simulated seconds
@@ -68,6 +69,11 @@ def _init_stats(heartbeat: bool = False) -> Dict[str, jnp.ndarray]:
     }
     if heartbeat:
         out["hb_expired"] = z  # updates excluded by heartbeat churn
+    if redispatch:
+        out["redispatched"] = z  # expired dispatches re-issued
+        out["rd_expired"] = z  # deadline expiries (incl. written off)
+    for s in agg_stats:
+        out[f"agg_{s}"] = z  # aggregator telemetry (e.g. norm_clip)
     return out
 
 
@@ -94,6 +100,7 @@ class AsyncEngine:
         )
         self.profile = _resolved_profile(cfg.profile)
         self.topo = cfg.resolved_topology()
+        self.fault_set = cfg.resolved_faults()
         self._init_state, core = self._build_step()
         self._chunk = ChunkRunner(
             core, aux_keys=("loss", "clock", "version", "buffer_fill")
@@ -104,7 +111,7 @@ class AsyncEngine:
         inject the mesh-sharded pop and sharding constraints."""
         return _make_async_step(
             self.task, self.cfg, self.policy, self.aggregator, self.profile,
-            topo=self.topo,
+            topo=self.topo, faults=self.fault_set,
         )
 
     def init(self) -> Dict:
@@ -195,9 +202,17 @@ class AsyncEngine:
             load_stats = empirical_load_stats(sel_hist)
         else:
             load_stats = selection_stats_from_accum(state["load_acc"])
+        load_stats = dict(load_stats)
         if "tier_acc" in state:
-            load_stats = dict(load_stats)
             load_stats.update(tier_stats_from_accum(state["tier_acc"]))
+        if "faults" in state:
+            for nm, cnt in self.fault_set.counters(state["faults"]).items():
+                load_stats[f"fault_{nm}_injected"] = cnt
+        if "redispatched" in st:
+            load_stats["redispatched"] = int(st["redispatched"])
+            load_stats["rd_expired"] = int(st["rd_expired"])
+        for s in self.aggregator.stat_names:
+            load_stats[f"agg_{s}"] = float(st[f"agg_{s}"])
         return RunResult(
             config=self.cfg,
             records=records,
@@ -213,7 +228,7 @@ def _make_async_step(
     task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
     profile: lat_mod.LatencyProfile,
     pop=None, cohort_layout=None, constrain_state=None,
-    aggregate=None, cohort_pad: int = 0, topo=None,
+    aggregate=None, cohort_pad: int = 0, topo=None, faults=None,
 ):
     """Builds ``(init_state, step core)`` with ``step(state, key) ->
     (state, aux)`` — the pure function the chunked scan body folds over
@@ -250,6 +265,15 @@ def _make_async_step(
     reduction. A star (or ``topo=None``) leaves every code path — state
     keys, key folds, ops — untouched, so the degenerate case is
     structurally bit-for-bit identical (pinned by ``tests/test_topo.py``).
+
+    ``faults`` (a ``repro.faults.FaultSet``) and a non-zero
+    ``cfg.redispatch_timeout`` follow the same structural-gating rule:
+    armed, they add their ``(n,)`` state to the carry and draw under
+    dedicated key folds (105 with sub-folds 0=dispatch/1=pop/2=corrupt;
+    106/107 for re-dispatch latency); absent, no state key, no fold, no
+    op exists and the engine is bit-for-bit today's
+    (``tests/test_faults.py`` pins both the structural and the rate-0
+    golden).
     """
     n = cfg.n_clients
     B = cfg.resolved_buffer_size()
@@ -257,13 +281,20 @@ def _make_async_step(
     H = cfg.max_versions
     tiered = topo is not None and not topo.is_star
     hb_timeout = float(topo.heartbeat_timeout) if topo is not None else 0.0
+    have_faults = faults is not None
+    rd_on = (cfg.redispatch_timeout or 0) > 0
+    kill_on = have_faults and faults.has("kill")
+    if have_faults and (faults.has("scale") or faults.has("noise")):
+        from repro.faults.inject import corrupt_updates
     if tiered:
         from repro.core.load_metric import init_tier_accum, update_tier_accum
         from repro.topo.reduce import make_hop_latency, tiered_apply
 
         assign_dev = jnp.asarray(topo.assign(n))
         hop_fn = make_hop_latency(topo, n)
-    if hb_timeout > 0:
+    if hb_timeout > 0 or rd_on:
+        # re-dispatch deadlines reuse the heartbeat liveness predicate:
+        # "no completion for longer than the timeout" is the same signal
         from repro.topo import heartbeat as hb_mod
     if pop is None:
         def pop(ev):
@@ -277,9 +308,8 @@ def _make_async_step(
             aggregate = tiered_apply(agg, topo, n)
         else:
             def aggregate(g, updates, bases, w, idx=None):
-                return agg.finalize(
-                    g, agg.accumulate(agg.init(g), updates, bases, w)
-                )
+                acc = agg.accumulate(agg.init(g), updates, bases, w)
+                return agg.finalize(g, acc), acc_stats(acc)
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
@@ -297,12 +327,21 @@ def _make_async_step(
             "speed": lat_mod.client_speed(key, n, profile),
             "clock": jnp.zeros((), jnp.float32),
             "version": jnp.zeros((), jnp.int32),
-            "stats": _init_stats(heartbeat=hb_timeout > 0),
+            "stats": _init_stats(heartbeat=hb_timeout > 0, redispatch=rd_on,
+                                 agg_stats=agg.stat_names),
         }
         if hb_timeout > 0:
             state["hb"] = hb_mod.init_heartbeat(n)
         if tiered:
             state["tier_acc"] = init_tier_accum(n, int(topo.tier_sizes[0]))
+        if have_faults:
+            # fold 7 off the init key: independent of the speed draw
+            state["faults"] = faults.init(jax.random.fold_in(key, 7))
+        if rd_on:
+            state["rd"] = {
+                "t_disp": jnp.zeros((n,), jnp.float32),
+                "retries": jnp.zeros((n,), jnp.int32),
+            }
         return state
 
     def step(state, key):
@@ -337,6 +376,16 @@ def _make_async_step(
             # fold 104: per-hop DAG latency. Only drawn when a multi-tier
             # topology is armed, so the star key schedule is untouched
             latency = latency + hop_fn(jax.random.fold_in(k_sel, 104))
+        if have_faults:
+            fstate = state["faults"]
+            # fold 105: the fault set's dedicated key (sub-folds:
+            # 0 dispatch, 1 pop, 2 corruption noise) — armed only when
+            # faults are, so the fault-free key schedule is untouched
+            k_fault = jax.random.fold_in(k_sel, 105)
+            if faults.has_dispatch:
+                fstate, latency = faults.on_dispatch(
+                    fstate, jax.random.fold_in(k_fault, 0), send, latency
+                )
         if hb_timeout > 0:
             # dispatch is a heartbeat: the client pulled the model at
             # the current clock
@@ -348,6 +397,42 @@ def _make_async_step(
         else:
             dropped = jnp.zeros((n,), jnp.bool_)
         ev = ev_mod.schedule_completions(ev, send, clock, latency, version, dropped)
+
+        # --- deadline-based re-dispatch of expired in-flight dispatches:
+        # a dispatch the server has not heard back from within the
+        # timeout is re-issued at the current version with a fresh
+        # latency (folds 106/107), at most redispatch_retries times —
+        # then written off (t_done=inf frees the client to be selected
+        # again). The original dispatch's dropout coin is preserved: a
+        # retry re-attempts delivery, not the client's fate.
+        if rd_on:
+            rd_t = jnp.where(send, clock, state["rd"]["t_disp"])
+            rd_cnt = jnp.where(send, 0, state["rd"]["retries"])
+            inflight = ~jnp.isinf(ev["t_done"])
+            exp = inflight & hb_mod.expired(
+                rd_t, clock, float(cfg.redispatch_timeout)
+            )
+            retry = exp & (rd_cnt < cfg.redispatch_retries)
+            give_up = exp & ~retry
+            rd_lat = lat_mod.sample_latency(
+                jax.random.fold_in(k_sel, 106), profile, state["speed"]
+            )
+            if tiered:
+                rd_lat = rd_lat + hop_fn(jax.random.fold_in(k_sel, 107))
+            ev = {
+                **ev,
+                "t_done": jnp.where(
+                    retry, clock + rd_lat,
+                    jnp.where(give_up, jnp.inf, ev["t_done"]),
+                ),
+                "disp_ver": jnp.where(retry, version, ev["disp_ver"]),
+            }
+            rd = {
+                "t_disp": jnp.where(retry, clock, rd_t),
+                "retries": rd_cnt + retry.astype(jnp.int32),
+            }
+            rd_retried = retry.astype(jnp.float32).sum()
+            rd_expired = exp.astype(jnp.float32).sum()
 
         # --- pop the next B completions, advance the simulated clock
         t_ev, idx, valid, ev = pop(ev)
@@ -363,6 +448,12 @@ def _make_async_step(
             valid = jnp.concatenate(
                 [valid, jnp.zeros((cohort_pad,), valid.dtype)]
             )
+        if have_faults and faults.has_pop:
+            # fold 105/1: per-slot injection coins over the popped cohort
+            fstate, eff = faults.on_pop(
+                fstate, jax.random.fold_in(k_fault, 1), idx, valid
+            )
+            eff = cohort_layout(eff)
         new_clock = jnp.maximum(clock, jnp.max(jnp.where(valid, t_ev, -jnp.inf)))
         # an all-idle fleet inside availability gaps must not freeze the
         # clock: with nothing in flight to pop, jump to the earliest
@@ -377,6 +468,15 @@ def _make_async_step(
         # versions older than the ring are trained from the oldest retained
         # model; staleness for weighting still uses the true dispatch version
         read_ver = jnp.clip(disp_ver, jnp.maximum(version - (H - 1), 0), version)
+        if have_faults and faults.has("replay"):
+            # stale replay: hit slots read an older retained version than
+            # they were dispatched (shift 0 elsewhere is exact identity on
+            # ints); the staleness *weight* below still sees the honest
+            # dispatch version — precisely the attack
+            read_ver = jnp.maximum(
+                read_ver - eff.replay_shift,
+                jnp.maximum(version - (H - 1), 0),
+            )
         disp_params = cohort_layout(
             jax.tree.map(lambda h: h[read_ver % H], state["hist"])
         )
@@ -391,9 +491,21 @@ def _make_async_step(
         updated, losses = cohort_layout(jax.vmap(local_update, in_axes=(0, 0, 0, 0))(
             disp_params, shards, keys, lr
         ))
+        if have_faults and (faults.has("scale") or faults.has("noise")):
+            # fold 105/2: corruption noise. Missed slots keep their exact
+            # input buffers (per-slot where inside corrupt_updates), so a
+            # rate-0 set is bitwise identity
+            updated = corrupt_updates(
+                updated, disp_params, eff, jax.random.fold_in(k_fault, 2),
+                faults.has("scale"), faults.has("noise"),
+            )
 
         # --- buffered aggregation of deltas through the aggregator seam
         succ = valid & ~ev["dropped"][idx]
+        if kill_on:
+            # mid-round dropout: the update never arrived — excluded from
+            # aggregation and from heartbeat contact below
+            succ = succ & ~eff.kill
         if hb_timeout > 0:
             # an update landing more than the timeout after its client's
             # last contact looks dead to its tier coordinator: excluded
@@ -403,13 +515,14 @@ def _make_async_step(
                 hb["last_beat"][idx], t_ev, hb_timeout
             )
             succ = succ & ~dark
-            hb = hb_mod.beat_at(hb, ev_mod.scatter_idx(idx, valid), t_ev)
+            arrived = valid & ~eff.kill if kill_on else valid
+            hb = hb_mod.beat_at(hb, ev_mod.scatter_idx(idx, arrived), t_ev)
         staleness = jnp.maximum(version - disp_ver, 0)
         w = agg.weigh(succ, staleness)
         wsum = w.sum()
         has = wsum > 0
         denom = jnp.maximum(wsum, 1e-9)
-        params = aggregate(state["params"], updated, disp_params, w, idx)
+        params, agg_tel = aggregate(state["params"], updated, disp_params, w, idx)
         version = version + has.astype(jnp.int32)
         hist = jax.tree.map(
             lambda h, p: h.at[version % H].set(p), state["hist"], params
@@ -459,6 +572,11 @@ def _make_async_step(
             stats["hb_expired"] = (
                 state["stats"]["hb_expired"] + dark.astype(jnp.float32).sum()
             )
+        if rd_on:
+            stats["redispatched"] = state["stats"]["redispatched"] + rd_retried
+            stats["rd_expired"] = state["stats"]["rd_expired"] + rd_expired
+        for s in agg.stat_names:
+            stats[f"agg_{s}"] = state["stats"][f"agg_{s}"] + agg_tel[s]
         new_state = {
             **state,
             "params": params, "hist": hist, "sched": sched, "ev": ev,
@@ -466,6 +584,10 @@ def _make_async_step(
         }
         if hb_timeout > 0:
             new_state["hb"] = hb
+        if have_faults:
+            new_state["faults"] = fstate
+        if rd_on:
+            new_state["rd"] = rd
         if tiered:
             new_state["tier_acc"] = update_tier_accum(
                 state["tier_acc"], send, assign_dev

@@ -97,6 +97,26 @@ class RunConfig:
     topology: Any = None
     topology_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
+    # --- fault injection (repro.faults) ---
+    # fault names from the @register_fault registry ("dropout,corrupt" or
+    # a sequence). Empty -> no fault state, no key folds, no ops: the
+    # engines are structurally bit-for-bit unchanged. Armed faults ride
+    # the donated scan carry as (n,) per-client state, so injection works
+    # single-device, chunked, fleet-sharded, and cohort-sharded.
+    faults: Any = ()
+    fault_rate: float = 0.05  # per-event injection probability
+    # per-fault kwargs, keyed by fault name: {"corrupt": {"sigma": 2.0}}
+    fault_kwargs: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict
+    )
+    # deadline-based re-dispatch (async engine): a dispatch still in
+    # flight this many simulated seconds later is re-issued at the
+    # current version with a fresh latency draw, at most
+    # redispatch_retries times; then it is written off. None/0 -> the
+    # expiry check and its (n,) state are absent entirely.
+    redispatch_timeout: Optional[float] = None
+    redispatch_retries: int = 1
+
     # cohort-parallel execution: partition the popped cohort (async) /
     # the round's cohort vmap (sync) across the device mesh instead of
     # replicating it, with shard-local aggregator accumulation merged by
@@ -164,6 +184,49 @@ class RunConfig:
             raise ValueError(
                 "topology_kwargs given without a topology name"
             )
+        names = self.fault_names()
+        if names:
+            if not 0.0 <= self.fault_rate <= 1.0:
+                raise ValueError(
+                    f"fault_rate must be in [0, 1], got {self.fault_rate}"
+                )
+            # jax-free name check (known_fault_names is import-light) so
+            # a typo fails at config construction, matching the eager
+            # topology resolution above; registry-plugin names resolve too
+            from repro.faults.registry import known_fault_names
+
+            known = known_fault_names()
+            bad = [nm for nm in names if nm not in known]
+            if bad:
+                raise ValueError(
+                    f"unknown fault(s) {', '.join(repr(b) for b in bad)}; "
+                    f"registered: {', '.join(known)}"
+                )
+            stray = set(self.fault_kwargs) - set(names)
+            if stray:
+                raise ValueError(
+                    f"fault_kwargs for fault(s) not in faults: "
+                    f"{', '.join(sorted(stray))}"
+                )
+        elif self.fault_kwargs:
+            raise ValueError("fault_kwargs given without faults")
+        if self.redispatch_timeout is not None:
+            if self.mode != "async":
+                raise ValueError(
+                    "redispatch_timeout re-issues expired dispatches on "
+                    "the async engine's event clock; sync rounds have no "
+                    "in-flight dispatches — drop it or use mode='async'"
+                )
+            if self.redispatch_timeout <= 0:
+                raise ValueError(
+                    f"redispatch_timeout must be > 0 (or None to disable),"
+                    f" got {self.redispatch_timeout}"
+                )
+            if self.redispatch_retries < 0:
+                raise ValueError(
+                    f"redispatch_retries must be >= 0, got "
+                    f"{self.redispatch_retries}"
+                )
 
     def cohort_width(self) -> int:
         """Padded cohort buffer width for variable-size policies."""
@@ -211,6 +274,34 @@ class RunConfig:
     def topology_name(self) -> str:
         topo = self.resolved_topology()
         return "star" if topo is None else topo.describe()
+
+    def fault_names(self) -> tuple:
+        """Normalized tuple of configured fault names ("a,b" or any
+        sequence of names; () / None / "" -> no faults)."""
+        if not self.faults:
+            return ()
+        if isinstance(self.faults, str):
+            return tuple(
+                nm.strip() for nm in self.faults.split(",") if nm.strip()
+            )
+        return tuple(self.faults)
+
+    def resolved_faults(self):
+        """The ``repro.faults.FaultSet`` this run injects, or None when
+        no faults are configured (lazy import, mirroring
+        ``resolved_topology``)."""
+        names = self.fault_names()
+        if not names:
+            return None
+        from repro.faults import FaultSet, make_fault
+
+        return FaultSet(
+            make_fault(
+                nm, self.n_clients, self.fault_rate,
+                **dict(self.fault_kwargs.get(nm, {})),
+            )
+            for nm in names
+        )
 
 
 def chunk_plan(rounds: int, eval_every: int, steps_per_chunk: int):

@@ -1,0 +1,188 @@
+"""Robust aggregation: registry entries that survive corrupted updates.
+
+Plain (weighted-)mean aggregation has breakdown point zero — one
+sign-flipped or 10x-scaled delta moves the global params arbitrarily far.
+These aggregators bound that influence, each through the seam that fits
+its math:
+
+  * ``norm_clip`` — per-slot L2 clipping of the delta *before* the
+    staleness-weighted mean. Clipping is per-slot, so the accumulator is
+    still a plain sum: ``additive=True``, and it runs unchanged under
+    cohort sharding (``cohort_sharded_apply``) and tiered/DAG reductions
+    (``topo.reduce.tiered_apply``). Carries a ``clipped`` counter in
+    ``acc["stats"]`` (surfaced as ``agg_clipped``).
+  * ``trimmed_mean`` — coordinate-wise trimmed mean of the deltas: the
+    ``trim`` fraction of highest and lowest values per coordinate is
+    discarded. Order statistics do not sum, so ``additive=False`` — it
+    goes through the engines' inline (non-sharded-cohort) apply path and
+    is rejected loudly by the psum/tier seams.
+  * ``coordinate_median`` — coordinate-wise median of the deltas, the
+    trim -> 50% limit; maximum breakdown, non-additive like above.
+
+All three are delta aggregators (``finalize`` adds the robust mean delta
+to the global params); ``trimmed_mean``/``coordinate_median`` treat
+weights as validity only (order statistics are unweighted — documented
+trade-off), while ``norm_clip`` keeps fedbuff's staleness weighting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.aggregators import (
+    Aggregator,
+    _wshape,
+    staleness_weight,
+)
+from repro.engine.registry import register_aggregator
+
+
+@register_aggregator("norm_clip")
+def make_norm_clip(clip: float = 10.0, staleness_mode: str = "poly",
+                   staleness_exp: float = 0.5) -> Aggregator:
+    """Per-slot L2 norm clipping of deltas, then the staleness-weighted
+    mean: a slot whose delta exceeds ``clip`` is scaled down onto the
+    ball, so a scaled-update attacker contributes at most a unit-norm
+    vote. Additive — per-slot clipping commutes with the sum."""
+    if clip <= 0:
+        raise ValueError(f"norm_clip: clip must be > 0, got {clip}")
+
+    def weigh(mask, staleness):
+        return mask.astype(jnp.float32) * staleness_weight(
+            staleness, staleness_mode, staleness_exp
+        )
+
+    def init(g):
+        return {
+            "dsum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), g),
+            "wsum": jnp.zeros((), jnp.float32),
+            "stats": {"clipped": jnp.zeros((), jnp.float32)},
+        }
+
+    def accumulate(acc, updates, bases, w):
+        deltas = jax.tree.map(
+            lambda u, b: (u - b).astype(jnp.float32), updates, bases
+        )
+        # per-slot global L2 over the whole delta pytree
+        sq = sum(
+            jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+            for d in jax.tree.leaves(deltas)
+        )
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+        ws = w * scale
+        dsum = jax.tree.map(
+            lambda s, d: s + jnp.sum(d * ws.reshape(_wshape(d)), axis=0),
+            acc["dsum"], deltas,
+        )
+        clipped = acc["stats"]["clipped"] + jnp.sum(
+            ((norm > clip) & (w > 0)).astype(jnp.float32)
+        )
+        return {
+            "dsum": dsum,
+            "wsum": acc["wsum"] + w.sum(),
+            "stats": {"clipped": clipped},
+        }
+
+    def finalize(g, acc):
+        has = acc["wsum"] > 0
+        denom = jnp.maximum(acc["wsum"], 1e-9)
+
+        def fin(gl, s):
+            return jnp.where(has, gl + (s / denom).astype(gl.dtype), gl)
+
+        return jax.tree.map(fin, g, acc["dsum"])
+
+    return Aggregator("norm_clip", weigh, init, accumulate, finalize,
+                      additive=True, stat_names=("clipped",))
+
+
+def _order_stat_aggregator(name: str, reduce_sorted) -> Aggregator:
+    """Shared chassis of the order-statistic aggregators: per-coordinate
+    sort of the valid deltas (invalid slots pushed to +inf at the top),
+    then ``reduce_sorted(d_sorted, ranks, c)`` picks the robust center.
+    Non-additive by construction."""
+
+    def weigh(mask, staleness):
+        # validity only: order statistics are unweighted
+        return mask.astype(jnp.float32)
+
+    def init(g):
+        return {
+            "delta": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), g
+            ),
+            "count": jnp.zeros((), jnp.float32),
+        }
+
+    def accumulate(acc, updates, bases, w):
+        valid = w > 0
+        c = valid.astype(jnp.int32).sum()
+
+        def one(u, b):
+            ws = _wshape(u)
+            d = jnp.where(
+                valid.reshape(ws), (u - b).astype(jnp.float32), jnp.inf
+            )
+            d_sorted = jnp.sort(d, axis=0)
+            ranks = jnp.arange(u.shape[0]).reshape(ws)
+            return reduce_sorted(d_sorted, ranks, c)
+
+        delta = jax.tree.map(one, updates, bases)
+        return {
+            "delta": jax.tree.map(jnp.add, acc["delta"], delta),
+            "count": acc["count"] + c.astype(jnp.float32),
+        }
+
+    def finalize(g, acc):
+        has = acc["count"] > 0
+
+        def fin(gl, d):
+            return jnp.where(has, gl + d.astype(gl.dtype), gl)
+
+        return jax.tree.map(fin, g, acc["delta"])
+
+    return Aggregator(name, weigh, init, accumulate, finalize,
+                      additive=False)
+
+
+@register_aggregator("trimmed_mean")
+def make_trimmed_mean(trim: float = 0.2) -> Aggregator:
+    """Coordinate-wise trimmed mean of the deltas: per coordinate, drop
+    the ``floor(c * trim)`` lowest and highest values among the ``c``
+    valid slots and average the middle — robust to ``trim`` of the
+    cohort colluding arbitrarily."""
+    if not 0.0 <= trim < 0.5:
+        raise ValueError(f"trimmed_mean: trim must be in [0, 0.5), got {trim}")
+
+    def reduce_sorted(d_sorted, ranks, c):
+        t = jnp.clip(
+            jnp.floor(c.astype(jnp.float32) * trim).astype(jnp.int32),
+            0, jnp.maximum((c - 1) // 2, 0),
+        )
+        keep = (ranks >= t) & (ranks < c - t)
+        kept = jnp.where(keep, d_sorted, 0.0)
+        return kept.sum(axis=0) / jnp.maximum(c - 2 * t, 1)
+
+    return _order_stat_aggregator("trimmed_mean", reduce_sorted)
+
+
+@register_aggregator("coordinate_median")
+def make_coordinate_median() -> Aggregator:
+    """Coordinate-wise median of the deltas — the trim -> 50% limit of
+    ``trimmed_mean`` (even counts average the two middle values)."""
+
+    def reduce_sorted(d_sorted, ranks, c):
+        lo = jnp.maximum((c - 1) // 2, 0)
+        hi = jnp.maximum(c // 2, 0)
+        pick = jnp.where(c > 0,
+                         (ranks == lo).astype(jnp.float32)
+                         + (ranks == hi).astype(jnp.float32), 0.0)
+        # lo == hi for odd c: pick sums to 2 either way, so /2 is the
+        # median (odd) or the midpoint of the two middle values (even)
+        return jnp.where(
+            c > 0, jnp.sum(jnp.where(pick > 0, d_sorted * pick, 0.0),
+                           axis=0) / 2.0, 0.0
+        )
+
+    return _order_stat_aggregator("coordinate_median", reduce_sorted)

@@ -65,8 +65,11 @@ from repro.sim import events as ev_mod
 # state entries whose leading-``n`` leaves shard over the fleet axis
 # ("hb" heartbeats and the "tier_acc" per-client last-selection vector
 # are (n,)-leading too; their (E,) per-tier moments stay replicated via
-# the shape[0] == n check in fleet_state_sharding)
-FLEET_STATE_KEYS = ("ev", "sched", "speed", "load_acc", "hb", "tier_acc")
+# the shape[0] == n check in fleet_state_sharding — same check that
+# keeps the fault sets' scalar "injected" counters replicated while
+# their (n,) prone masks and the re-dispatch deadline vectors shard)
+FLEET_STATE_KEYS = ("ev", "sched", "speed", "load_acc", "hb", "tier_acc",
+                    "faults", "rd")
 
 
 def per_device_state_bytes(state, dev) -> int:
@@ -266,7 +269,7 @@ class ShardedAsyncEngine(AsyncEngine):
                 cohort_pad=dist.cohort_padding(
                     cfg.resolved_buffer_size(), self.mesh_shards
                 ),
-                topo=self.topo,
+                topo=self.topo, faults=self.fault_set,
             )
 
         # bit-exact default: cohort-sized (B,) intermediates pinned to a
@@ -280,7 +283,7 @@ class ShardedAsyncEngine(AsyncEngine):
         return _make_async_step(
             self.task, cfg, self.policy, self.aggregator, self.profile,
             pop=pop, cohort_layout=replicate, constrain_state=constrain_state,
-            topo=self.topo,
+            topo=self.topo, faults=self.fault_set,
         )
 
     def init(self) -> Dict:

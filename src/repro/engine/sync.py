@@ -72,6 +72,15 @@ class SyncEngine:
                 "for a client to go dark in — drop heartbeat_timeout or "
                 "use mode='async'"
             )
+        self.fault_set = cfg.resolved_faults()
+        if self.fault_set is not None:
+            only = self.fault_set.async_only_names()
+            if only:
+                raise ValueError(
+                    f"fault(s) {', '.join(only)} act on the async engine's "
+                    "wall clock / version ring; sync rounds have neither — "
+                    "drop them or use mode='async'"
+                )
         tiered = self.topo is not None and not self.topo.is_star
         self._assign = (
             jnp.asarray(self.topo.assign(cfg.n_clients)) if tiered else None
@@ -125,6 +134,7 @@ class SyncEngine:
                 cohort_layout=cohort_layout,
                 aggregate=aggregate,
                 cohort_shards=shards,
+                faults=self.fault_set,
             )
             self._sharded_eval = make_sharded_eval(
                 task, self.mesh, dist.FLEET_AXIS
@@ -138,19 +148,32 @@ class SyncEngine:
                     self.aggregator, self.topo, cfg.n_clients,
                     stacked_bases=False,
                 ),
+                faults=self.fault_set,
             )
         else:
-            core = _make_round_core(task, cfg, self.policy, self.aggregator)
+            core = _make_round_core(task, cfg, self.policy, self.aggregator,
+                                    faults=self.fault_set)
 
         assign = self._assign
+        have_faults = self.fault_set is not None
+        stat_names = self.aggregator.stat_names
 
         def scan_step(state, key):
-            params, sched, selected, loss = core(state["params"], state["sched"], key)
+            params, sched, selected, loss, fstate, tel = core(
+                state["params"], state["sched"], key,
+                state["faults"] if have_faults else None,
+            )
             out = {"params": params, "sched": sched}
             if assign is not None:
                 out["tier_acc"] = update_tier_accum(
                     state["tier_acc"], selected, assign
                 )
+            if have_faults:
+                out["faults"] = fstate
+            if stat_names:
+                out["agg_stats"] = {
+                    s: state["agg_stats"][s] + tel[s] for s in stat_names
+                }
             return out, {"send": selected, "loss": loss}
 
         self._chunk = ChunkRunner(scan_step, aux_keys=("loss",))
@@ -171,6 +194,17 @@ class SyncEngine:
             state["tier_acc"] = init_tier_accum(
                 cfg.n_clients, int(self.topo.tier_sizes[0])
             )
+        if self.fault_set is not None:
+            # off the far end of the round-index fold range so fault-prone
+            # draws never collide with a per-round fold_in(k_run, r)
+            state["faults"] = self.fault_set.init(
+                jax.random.fold_in(k_run, 2**31)
+            )
+        if self.aggregator.stat_names:
+            state["agg_stats"] = {
+                s: jnp.zeros((), jnp.float32)
+                for s in self.aggregator.stat_names
+            }
         return dealias_pytree(state)
 
     def step(self, state: Dict, r: int):
@@ -210,9 +244,15 @@ class SyncEngine:
             load_stats = empirical_load_stats(sel_hist)
         else:
             load_stats = selection_stats_from_accum(state["load_acc"])
+        load_stats = dict(load_stats)
         if "tier_acc" in state:
-            load_stats = dict(load_stats)
             load_stats.update(tier_stats_from_accum(state["tier_acc"]))
+        if "faults" in state:
+            for nm, cnt in self.fault_set.counters(state["faults"]).items():
+                load_stats[f"fault_{nm}_injected"] = cnt
+        if "agg_stats" in state:
+            for s in self.aggregator.stat_names:
+                load_stats[f"agg_{s}"] = float(state["agg_stats"][s])
         return RunResult(
             config=self.cfg,
             records=records,
@@ -225,7 +265,8 @@ class SyncEngine:
 
 
 def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
-                     cohort_layout=None, aggregate=None, cohort_shards: int = 1):
+                     cohort_layout=None, aggregate=None, cohort_shards: int = 1,
+                     faults=None):
     """The pure per-round function (no jit): shared by the legacy per-step
     path and the scan body of the chunked hot loop.
 
@@ -235,7 +276,13 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
     ``init/accumulate/finalize`` chain with the shard-local path, and
     ``cohort_shards`` pads the cohort axis with weight-0 slots to the
     next multiple of the mesh. Defaults reproduce the single-device
-    round bit-for-bit."""
+    round bit-for-bit.
+
+    ``faults`` (a ``repro.faults.FaultSet``) threads per-client fault
+    state through the round: fault keys fold off ``k_sel`` at 105 (the
+    same schedule as the async engine — sub-fold 1 for ``on_pop``, 2 for
+    update corruption), so with no faults armed no extra key material is
+    drawn and the round is bit-for-bit the faultless one."""
     from repro.core.distributed import cohort_padding
 
     width = cfg.cohort_width() if not policy.exact_k else cfg.k
@@ -244,14 +291,22 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
     if cohort_layout is None:
         cohort_layout = lambda tree: tree  # noqa: E731
     if aggregate is None:
+        from repro.engine.aggregators import acc_stats
+
         def aggregate(g, updates, bases, w, idx=None):
-            return agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
+            acc = agg.accumulate(agg.init(g), updates, bases, w)
+            return agg.finalize(g, acc), acc_stats(acc)
+    have_faults = faults is not None
+    kill_on = have_faults and faults.has("kill")
+    corrupt_on = have_faults and (faults.has("scale") or faults.has("noise"))
+    if corrupt_on:
+        from repro.faults.inject import corrupt_updates
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
     lr_fn = exponential_decay(cfg.lr0, cfg.lr_decay)
 
-    def round_fn(params, sched_state, key):
+    def round_fn(params, sched_state, key, fstate=None):
         k_sel, k_local = jax.random.split(key)
         selected, sched_state = policy.step(sched_state, k_sel)
         idx, mask = cohort_indices(selected, width)
@@ -263,6 +318,13 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
             idx = jnp.concatenate([idx, jnp.zeros((cohort_pad,), idx.dtype)])
             mask = jnp.concatenate([mask, jnp.zeros((cohort_pad,), mask.dtype)])
             keys = keys[jnp.minimum(jnp.arange(wp), width - 1)]
+        eff = None
+        if have_faults:
+            k_fault = jax.random.fold_in(k_sel, 105)
+            fstate, eff = faults.on_pop(
+                fstate, jax.random.fold_in(k_fault, 1), idx, mask > 0
+            )
+            eff = cohort_layout(eff)
         shards = cohort_layout(jax.tree.map(lambda a: a[idx], task.client_data))
         lr = lr_fn(sched_state["round"] - 1)
         # the cohort axis of the global params is a lazy vmap broadcast —
@@ -273,20 +335,38 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
                 params, shards, keys, lr
             )
         )
+        if corrupt_on:
+            updated = corrupt_updates(
+                updated, params, eff, jax.random.fold_in(k_fault, 2),
+                faults.has("scale"), faults.has("noise"),
+            )
+        valid = mask > 0
+        if kill_on:
+            # a dropped client's update never reaches the server: weight 0
+            valid = valid & ~eff.kill
         # sync cohorts are never stale: staleness is identically zero
-        w = agg.weigh(mask > 0, jnp.zeros_like(idx))
-        params = aggregate(params, updated, params, w, idx)
+        w = agg.weigh(valid, jnp.zeros_like(idx))
+        params, tel = aggregate(params, updated, params, w, idx)
         wsum = w.sum()
         # NaN, not a fake near-0 datapoint, when nobody was selected
         # (matching the async engine's empty-buffer convention)
         mean_loss = jnp.where(
             wsum > 0, jnp.sum(losses * w) / jnp.maximum(wsum, 1.0), jnp.nan
         )
-        return params, sched_state, selected, mean_loss
+        return params, sched_state, selected, mean_loss, fstate, tel
 
     return round_fn
 
 
 def _make_round_fn(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator):
-    """Jitted per-round step (legacy helper for ``fl/rounds.py``)."""
-    return jax.jit(_make_round_core(task, cfg, policy, agg))
+    """Jitted per-round step (legacy helper for ``fl/rounds.py``):
+    the fault/telemetry-free 4-tuple view of the round core."""
+    core = _make_round_core(task, cfg, policy, agg)
+
+    def round_fn(params, sched_state, key):
+        params, sched_state, selected, loss, _, _ = core(
+            params, sched_state, key
+        )
+        return params, sched_state, selected, loss
+
+    return jax.jit(round_fn)

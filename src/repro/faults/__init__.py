@@ -1,0 +1,40 @@
+"""Fault injection + graceful degradation (``repro.faults``).
+
+    from repro.faults import make_fault, FaultSet
+
+    fs = FaultSet([make_fault("dropout", n, 0.1),
+                   make_fault("corrupt", n, 0.05, sigma=2.0)])
+
+Engines take the set through ``RunConfig(faults=("dropout", "corrupt"),
+fault_rate=...)``; the serving loop takes serve-scope faults directly
+(``run_serve_loop(faults=[make_fault("replica_crash", R, 0.2)])``).
+"""
+from repro.faults.inject import (  # noqa: F401
+    Effects,
+    Fault,
+    FaultSet,
+    corrupt_updates,
+    identity_effects,
+    merge_effects,
+)
+from repro.faults.registry import (  # noqa: F401
+    BUILTIN_FAULTS,
+    fault_names,
+    known_fault_names,
+    make_fault,
+    register_fault,
+)
+
+__all__ = [
+    "BUILTIN_FAULTS",
+    "Effects",
+    "Fault",
+    "FaultSet",
+    "corrupt_updates",
+    "fault_names",
+    "identity_effects",
+    "known_fault_names",
+    "make_fault",
+    "merge_effects",
+    "register_fault",
+]

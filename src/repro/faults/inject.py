@@ -1,0 +1,376 @@
+"""Deterministic PRNG-driven fault injection for the fleet engines.
+
+A :class:`Fault` is a per-client state pytree plus up to two pure hooks
+the engines call under *dedicated* key folds:
+
+  * ``on_dispatch(fstate, key, send, latency)`` fires when clients pull a
+    model (async engine only — sync rounds have no dispatch latency) and
+    may perturb the sampled wall-clock latencies (straggler stalls);
+  * ``on_pop(fstate, key, idx, valid)`` fires on the popped/selected
+    cohort and returns an :class:`Effects` record — which slots to kill,
+    how to corrupt their deltas, how far to replay their read version.
+
+Per-fault state is a dict of ``(n,)`` arrays plus scalar counters, so it
+rides the engines' donated scan carry like every other per-client array:
+the same fault set works single-device, chunked, fleet-sharded, and
+cohort-sharded with zero engine forks. Faults-off is *structurally*
+bit-for-bit identical (no state keys, no key folds, no ops added), and a
+rate-0 fault set is bitwise identity too — every effect application is a
+per-slot ``jnp.where`` that selects the untouched input when the fault
+missed (pinned by ``tests/test_faults.py``).
+
+Hit selection is two-stage: ``init`` draws a persistent ``prone`` mask
+(``client_frac`` of the fleet is susceptible at all — 1.0 skips the draw)
+and each event Bernoulli-samples at ``rate`` among prone participants, so
+a run can model "5% of devices are flaky" separately from "a flaky device
+fails 30% of the time".
+
+``replica_crash`` is scope="serve": the serving loop consumes its rate
+directly (``serve/loop.py``); the engines reject serve-scope faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.faults.registry import register_fault
+
+# replay shift meaning "as stale as the ring allows": the engine clips
+# the shifted read version to the oldest retained model
+MAX_REPLAY = 1 << 20
+
+
+class Effects(NamedTuple):
+    """Merged per-slot fault effects over one popped/selected cohort.
+
+    Identity values (False / 1.0 / 0.0 / 0) leave a slot untouched
+    bitwise — the engines apply every channel through a per-slot
+    ``where`` keyed on the non-identity entries.
+    """
+
+    kill: jnp.ndarray  # (B,) bool — drop the slot's update mid-round
+    delta_scale: jnp.ndarray  # (B,) f32 — multiply the slot's delta
+    noise_sigma: jnp.ndarray  # (B,) f32 — gaussian noise added to the delta
+    replay_shift: jnp.ndarray  # (B,) i32 — serve an older ring version
+
+
+def identity_effects(shape) -> Effects:
+    return Effects(
+        kill=jnp.zeros(shape, jnp.bool_),
+        delta_scale=jnp.ones(shape, jnp.float32),
+        noise_sigma=jnp.zeros(shape, jnp.float32),
+        replay_shift=jnp.zeros(shape, jnp.int32),
+    )
+
+
+def merge_effects(a: Effects, b: Effects) -> Effects:
+    """Compose two faults' effects on the same cohort: kills OR, delta
+    scales multiply, noise variances add (sigmas here are per-fault and
+    independent — summing sigma is the conservative upper envelope),
+    replay shifts take the max."""
+    return Effects(
+        kill=a.kill | b.kill,
+        delta_scale=a.delta_scale * b.delta_scale,
+        noise_sigma=a.noise_sigma + b.noise_sigma,
+        replay_shift=jnp.maximum(a.replay_shift, b.replay_shift),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One registered fault: per-client state + pure injection hooks."""
+
+    name: str
+    channels: Tuple[str, ...]  # of: kill latency scale noise replay
+    rate: float = 0.0
+    scope: str = "engine"  # engine | serve
+    async_only: bool = False
+    init: Optional[Callable] = None  # (key) -> state dict
+    # (fstate, key, send (n,), latency (n,)) -> (fstate, latency)
+    on_dispatch: Optional[Callable] = None
+    # (fstate, key, idx (B,), valid (B,)) -> (fstate, Effects)
+    on_pop: Optional[Callable] = None
+
+
+class FaultSet:
+    """An ordered collection of engine-scope faults sharing one key fold.
+
+    The engines talk to the set, never to individual faults: ``init``
+    builds the per-fault state dict keyed by fault name, ``on_dispatch``/
+    ``on_pop`` thread the state through every fault (sub-fold ``i`` per
+    fault, so adding a fault never perturbs another's stream) and merge
+    the effects.
+    """
+
+    def __init__(self, faults):
+        faults = tuple(faults)
+        names = [f.name for f in faults]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate fault names in set: {names}")
+        serve = [f.name for f in faults if f.scope != "engine"]
+        if serve:
+            raise ValueError(
+                f"fault(s) {', '.join(serve)} are serve-scope (replica "
+                "crashes): pass them to run_serve_loop(faults=...), not "
+                "to the training engines"
+            )
+        self.faults = faults
+        self.channels = frozenset(c for f in faults for c in f.channels)
+
+    def has(self, channel: str) -> bool:
+        return channel in self.channels
+
+    @property
+    def has_dispatch(self) -> bool:
+        return any(f.on_dispatch is not None for f in self.faults)
+
+    @property
+    def has_pop(self) -> bool:
+        return any(f.on_pop is not None for f in self.faults)
+
+    def async_only_names(self) -> Tuple[str, ...]:
+        return tuple(f.name for f in self.faults if f.async_only)
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(f.name for f in self.faults)
+
+    def init(self, key) -> Dict[str, Dict]:
+        return {
+            f.name: f.init(jax.random.fold_in(key, i))
+            for i, f in enumerate(self.faults)
+        }
+
+    def on_dispatch(self, fstate, key, send, latency):
+        for i, f in enumerate(self.faults):
+            if f.on_dispatch is None:
+                continue
+            sub, latency = f.on_dispatch(
+                fstate[f.name], jax.random.fold_in(key, i), send, latency
+            )
+            fstate = {**fstate, f.name: sub}
+        return fstate, latency
+
+    def on_pop(self, fstate, key, idx, valid):
+        eff = identity_effects(idx.shape)
+        for i, f in enumerate(self.faults):
+            if f.on_pop is None:
+                continue
+            sub, e = f.on_pop(
+                fstate[f.name], jax.random.fold_in(key, i), idx, valid
+            )
+            fstate = {**fstate, f.name: sub}
+            eff = merge_effects(eff, e)
+        return fstate, eff
+
+    def counters(self, fstate) -> Dict[str, float]:
+        return {
+            f.name: float(fstate[f.name]["injected"]) for f in self.faults
+        }
+
+
+def corrupt_updates(updated, bases, eff: Effects, key,
+                    has_scale: bool, has_noise: bool):
+    """Apply the scale/noise channels to the cohort's trained params.
+
+    ``updated`` is cohort-stacked; ``bases`` is the params each slot
+    trained from (stacked, or the unstacked global tree — broadcasts).
+    Each channel is applied *independently* through its own per-slot
+    ``where``: scale rewrites a hit slot's update as
+    ``base + scale * delta``, noise adds ``sigma * N(0, 1)`` directly to
+    the hit slot's params. A missed slot keeps its exact input buffer
+    (``b + (u - b)`` is not bitwise ``u`` in floating point), which is
+    what makes a rate-0 corrupting fault set bitwise identity — and the
+    channels stay separate expressions rather than one fused
+    ``scale * delta + noise`` chain, which empirically keeps XLA from
+    re-fusing the downstream cohort reduction when several corrupting
+    faults are armed at once.
+    """
+    lu = jax.tree.leaves(updated)
+    lb = jax.tree.leaves(bases)
+
+    def one(i, u, b):
+        ws = (-1,) + (1,) * (u.ndim - 1)
+        if has_scale:
+            hit = (eff.delta_scale != 1.0).reshape(ws)
+            d = (u - b).astype(jnp.float32) * eff.delta_scale.reshape(ws)
+            u = jnp.where(hit, b + d.astype(u.dtype), u)
+        if has_noise:
+            hit = (eff.noise_sigma > 0.0).reshape(ws)
+            noise = eff.noise_sigma.reshape(ws) * jax.random.normal(
+                jax.random.fold_in(key, i), u.shape, jnp.float32
+            )
+            u = jnp.where(hit, u + noise.astype(u.dtype), u)
+        return u
+
+    out = [one(i, u, b) for i, (u, b) in enumerate(zip(lu, lb))]
+    return jax.tree.unflatten(jax.tree.structure(updated), out)
+
+
+# ---------------------------------------------------------------------------
+# Built-in faults
+# ---------------------------------------------------------------------------
+
+
+def _prone_init(n: int, client_frac: float):
+    """Persistent susceptible-client mask + injection counter."""
+    if not 0.0 <= client_frac <= 1.0:
+        raise ValueError(f"client_frac must be in [0, 1], got {client_frac}")
+
+    def init(key):
+        if client_frac >= 1.0:
+            prone = jnp.ones((n,), jnp.bool_)
+        else:
+            prone = jax.random.bernoulli(key, client_frac, (n,))
+        return {"prone": prone, "injected": jnp.zeros((), jnp.float32)}
+
+    return init
+
+
+def _check_rate(name: str, rate: float) -> None:
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"{name}: rate must be in [0, 1], got {rate}")
+
+
+def _cohort_hit(fst, key, idx, valid, rate):
+    """Per-slot injection coin among prone, valid cohort members."""
+    hit = fst["prone"][idx] & valid
+    if rate < 1.0:
+        hit = hit & jax.random.bernoulli(key, rate, idx.shape)
+    return hit
+
+
+def _count(fst, hit):
+    return {**fst, "injected": fst["injected"] + hit.sum(dtype=jnp.float32)}
+
+
+@register_fault("dropout")
+def make_dropout(n: int, rate: float, client_frac: float = 1.0) -> Fault:
+    """Mid-round dropout: the client trained but its update never arrives
+    — the slot is excluded from aggregation like a dropped buffer slot."""
+    _check_rate("dropout", rate)
+
+    def on_pop(fst, key, idx, valid):
+        hit = _cohort_hit(fst, key, idx, valid, rate)
+        eff = identity_effects(idx.shape)._replace(kill=hit)
+        return _count(fst, hit), eff
+
+    return Fault("dropout", channels=("kill",), rate=rate,
+                 init=_prone_init(n, client_frac), on_pop=on_pop)
+
+
+@register_fault("straggler")
+def make_straggler(n: int, rate: float, stall: float = 10.0,
+                   client_frac: float = 1.0) -> Fault:
+    """Straggler stall: a dispatched client's wall-clock latency is
+    multiplied by ``stall`` — it completes eventually, arbitrarily stale
+    (and past any re-dispatch deadline). Async only: sync rounds have no
+    wall clock for the stall to act on."""
+    _check_rate("straggler", rate)
+    if stall <= 0:
+        raise ValueError(f"straggler: stall must be > 0, got {stall}")
+
+    def on_dispatch(fst, key, send, latency):
+        hit = fst["prone"] & send
+        if rate < 1.0:
+            hit = hit & jax.random.bernoulli(key, rate, (n,))
+        latency = jnp.where(hit, latency * jnp.float32(stall), latency)
+        return _count(fst, hit), latency
+
+    return Fault("straggler", channels=("latency",), rate=rate,
+                 async_only=True, init=_prone_init(n, client_frac),
+                 on_dispatch=on_dispatch)
+
+
+@register_fault("stale_replay")
+def make_stale_replay(n: int, rate: float, shift: int = MAX_REPLAY,
+                      client_frac: float = 1.0) -> Fault:
+    """Stale replay: the client ignores the model it was handed and
+    trains from a version ``shift`` older (clipped to the oldest retained
+    ring slot). Staleness *weighting* still sees the honest dispatch
+    version — the attack is exactly that the discount does not know.
+    Async only: the sync engine has no version ring to replay from."""
+    _check_rate("stale_replay", rate)
+    if shift < 1:
+        raise ValueError(f"stale_replay: shift must be >= 1, got {shift}")
+
+    def on_pop(fst, key, idx, valid):
+        hit = _cohort_hit(fst, key, idx, valid, rate)
+        eff = identity_effects(idx.shape)._replace(
+            replay_shift=jnp.where(hit, jnp.int32(shift), 0)
+        )
+        return _count(fst, hit), eff
+
+    return Fault("stale_replay", channels=("replay",), rate=rate,
+                 async_only=True, init=_prone_init(n, client_frac),
+                 on_pop=on_pop)
+
+
+@register_fault("corrupt")
+def make_corrupt(n: int, rate: float, sigma: float = 1.0,
+                 client_frac: float = 1.0) -> Fault:
+    """Corrupted update: gaussian noise of scale ``sigma`` added to the
+    slot's delta (bit flips, truncated uploads, garbage gradients)."""
+    _check_rate("corrupt", rate)
+    if sigma <= 0:
+        raise ValueError(f"corrupt: sigma must be > 0, got {sigma}")
+
+    def on_pop(fst, key, idx, valid):
+        hit = _cohort_hit(fst, key, idx, valid, rate)
+        eff = identity_effects(idx.shape)._replace(
+            noise_sigma=jnp.where(hit, jnp.float32(sigma), 0.0)
+        )
+        return _count(fst, hit), eff
+
+    return Fault("corrupt", channels=("noise",), rate=rate,
+                 init=_prone_init(n, client_frac), on_pop=on_pop)
+
+
+@register_fault("sign_flip")
+def make_sign_flip(n: int, rate: float, client_frac: float = 1.0) -> Fault:
+    """Sign-flipping attacker: the slot submits ``-delta``, steering the
+    aggregate away from its own descent direction."""
+    _check_rate("sign_flip", rate)
+
+    def on_pop(fst, key, idx, valid):
+        hit = _cohort_hit(fst, key, idx, valid, rate)
+        eff = identity_effects(idx.shape)._replace(
+            delta_scale=jnp.where(hit, -1.0, 1.0)
+        )
+        return _count(fst, hit), eff
+
+    return Fault("sign_flip", channels=("scale",), rate=rate,
+                 init=_prone_init(n, client_frac), on_pop=on_pop)
+
+
+@register_fault("scale_attack")
+def make_scale_attack(n: int, rate: float, factor: float = 10.0,
+                      client_frac: float = 1.0) -> Fault:
+    """Scaled-update (model replacement) attacker: the slot's delta is
+    boosted ``factor``x to dominate the aggregate."""
+    _check_rate("scale_attack", rate)
+    if factor == 1.0:
+        raise ValueError("scale_attack: factor=1.0 is a no-op")
+
+    def on_pop(fst, key, idx, valid):
+        hit = _cohort_hit(fst, key, idx, valid, rate)
+        eff = identity_effects(idx.shape)._replace(
+            delta_scale=jnp.where(hit, jnp.float32(factor), 1.0)
+        )
+        return _count(fst, hit), eff
+
+    return Fault("scale_attack", channels=("scale",), rate=rate,
+                 init=_prone_init(n, client_frac), on_pop=on_pop)
+
+
+@register_fault("replica_crash")
+def make_replica_crash(n: int, rate: float) -> Fault:
+    """Serve-tier replica crash: each tick, each alive replica dies with
+    probability ``rate`` (the last alive replica is spared so the pool
+    can always drain). Consumed by ``serve.run_serve_loop`` — in-flight
+    streams on a crashed replica re-enter the queue and resume on a
+    survivor through the bit-for-bit join path."""
+    _check_rate("replica_crash", rate)
+    return Fault("replica_crash", channels=(), rate=rate, scope="serve")

@@ -85,6 +85,27 @@ def add_common_args(ap: argparse.ArgumentParser, defaults: Dict[str, Any]) -> No
                          "devices. Allclose-equivalent to the replicated "
                          "layout (reduction order differs), measurably "
                          "faster on real multi-device hosts.")
+    # --- fault injection & graceful degradation (repro.faults) ---
+    ap.add_argument("--faults", default=None, metavar="NAME[,NAME...]",
+                    help="comma-separated fault injections from the "
+                         "@register_fault registry (e.g. dropout,corrupt). "
+                         "Deterministic per-seed; omitting the flag is "
+                         "bit-for-bit identical to a fault-free run.")
+    ap.add_argument("--fault-rate", type=float, default=0.05,
+                    help="per-event injection probability shared by every "
+                         "armed fault (default 0.05)")
+    ap.add_argument("--robust-agg", default=None, metavar="NAME",
+                    help="shorthand for --aggregator with a robust rule "
+                         "(norm_clip | trimmed_mean | coordinate_median); "
+                         "conflicts with --aggregator")
+    ap.add_argument("--redispatch-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="deadline-based re-dispatch: an in-flight client "
+                         "past this simulated-seconds deadline is re-sent "
+                         "the current model (async engine only)")
+    ap.add_argument("--redispatch-retries", type=int, default=1,
+                    help="re-dispatch attempts per dispatch before the "
+                         "slot is abandoned (default 1)")
 
 
 def build_task(args: argparse.Namespace) -> FLTask:
@@ -132,9 +153,38 @@ def topology_args(args: argparse.Namespace) -> Dict[str, Any]:
     return {"topology": args.topology, "topology_kwargs": kw}
 
 
+def fault_args(args: argparse.Namespace) -> Dict[str, Any]:
+    """``faults``/``redispatch_*`` RunConfig fields from the shared fault
+    flags; ``--robust-agg`` is folded into ``args.aggregator`` so the
+    drivers' aggregator handling sees one source of truth."""
+    if args.robust_agg is not None:
+        if args.aggregator is not None:
+            raise SystemExit(
+                "--robust-agg is shorthand for --aggregator: pass one"
+            )
+        args.aggregator = args.robust_agg
+    kw: Dict[str, Any] = {}
+    if args.faults is not None:
+        from repro.faults import known_fault_names
+
+        names = tuple(s.strip() for s in args.faults.split(",") if s.strip())
+        unknown = [n for n in names if n not in known_fault_names()]
+        if unknown:
+            raise SystemExit(
+                f"unknown fault(s) {', '.join(unknown)}; registered: "
+                f"{', '.join(known_fault_names())}"
+            )
+        kw["faults"] = names
+        kw["fault_rate"] = args.fault_rate
+    if args.redispatch_timeout is not None:
+        kw["redispatch_timeout"] = args.redispatch_timeout
+        kw["redispatch_retries"] = args.redispatch_retries
+    return kw
+
+
 def build_run_config(args: argparse.Namespace, mode: str, eval_div: int,
                      **extra) -> RunConfig:
-    extra = {**topology_args(args), **extra}
+    extra = {**topology_args(args), **fault_args(args), **extra}
     return RunConfig(
         mode=mode,
         n_clients=args.clients, k=args.k, m=args.m, policy=args.policy,

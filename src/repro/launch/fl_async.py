@@ -21,6 +21,9 @@ Examples:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.fl_async --mesh-shards 0 \
       --clients 200 --rounds 40       # fleet state sharded over 8 devices
+  PYTHONPATH=src python -m repro.launch.fl_async --faults dropout,corrupt \
+      --fault-rate 0.1 --robust-agg trimmed_mean \
+      --redispatch-timeout 30         # chaos run with graceful degradation
 """
 from __future__ import annotations
 
@@ -63,7 +66,8 @@ def main() -> None:
         aggregator_kwargs={
             "staleness_mode": "const" if args.staleness_weight == 0 else "poly",
             "staleness_exp": args.staleness_weight,
-        } if args.aggregator in (None, "fedbuff", "fedprox") else {},
+        } if (args.aggregator in (None, "fedbuff", "fedprox", "norm_clip")
+              and args.robust_agg in (None, "norm_clip")) else {},
         buffer_size=args.buffer_size,
         max_versions=args.max_versions,
         profile=args.latency_profile,
@@ -96,6 +100,20 @@ def main() -> None:
     print(f"staleness: mean={ws['mean_staleness']:.2f} max={ws['max_staleness']}")
     if "hb_expired" in ws:
         print(f"heartbeat churn: {ws['hb_expired']} updates expired")
+    ls = res.load_stats or {}
+    injected = {k[len("fault_"):-len("_injected")]: v for k, v in ls.items()
+                if k.startswith("fault_") and k.endswith("_injected")}
+    if injected:
+        print("faults injected: " + ", ".join(
+            f"{nm}={int(v)}" for nm, v in injected.items()))
+    if "redispatched" in ls:
+        print(f"re-dispatch: {ls['redispatched']} re-sent, "
+              f"{ls['rd_expired']} deadline hits")
+    agg_stats = {k[len("agg_"):]: v for k, v in ls.items()
+                 if k.startswith("agg_")}
+    if agg_stats:
+        print("robust aggregation: " + ", ".join(
+            f"{nm}={int(v)}" for nm, v in agg_stats.items()))
     # load_stats now come from the device-resident accumulators whenever
     # the (rounds, n) history is not materialized — fleet scale included
     if res.load_stats:

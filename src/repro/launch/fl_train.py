@@ -60,6 +60,16 @@ def main() -> None:
           f"Var markov*={load_metric.optimal_var(cfg.n_clients, cfg.k, cfg.m):.3f}")
     print(f"cohort   : mean={stats['mean_cohort']:.2f} std={stats['std_cohort']:.2f} "
           f"range [{stats['min_cohort']}, {stats['max_cohort']}]")
+    injected = {k[len("fault_"):-len("_injected")]: v for k, v in stats.items()
+                if k.startswith("fault_") and k.endswith("_injected")}
+    if injected:
+        print("faults injected: " + ", ".join(
+            f"{nm}={int(v)}" for nm, v in injected.items()))
+    agg_stats = {k[len("agg_"):]: v for k, v in stats.items()
+                 if k.startswith("agg_")}
+    if agg_stats:
+        print("robust aggregation: " + ", ".join(
+            f"{nm}={int(v)}" for nm, v in agg_stats.items()))
     print_tier_stats(res.load_stats)
     if args.target_acc:
         r = rounds_to_target(res.history(), args.target_acc)

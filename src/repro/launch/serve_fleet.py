@@ -57,6 +57,10 @@ def main() -> None:
                     help="median tokens generated per request")
     ap.add_argument("--ticks-per-chunk", type=int, default=12,
                     help="serving-trace ticks issued after each training chunk")
+    ap.add_argument("--crash-rate", type=float, default=0.0,
+                    help="per-tick replica crash probability (replica_crash "
+                         "fault; in-flight streams fail over to survivors, "
+                         "the last alive replica is spared)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -81,6 +85,12 @@ def main() -> None:
     ctx = args.prompt_len + max(1, 2 * args.gen)
     pool = ReplicaPool(model, args.replicas, args.slots, ctx,
                        stagger=args.stagger)
+    serve_faults = None
+    if args.crash_rate > 0:
+        from repro.faults import make_fault
+
+        serve_faults = [make_fault("replica_crash", args.replicas,
+                                   args.crash_rate)]
     print(f"train: arch={cfg_arch.name} n={args.clients} k={args.k} "
           f"policy={args.policy} steps={args.rounds} ring H={args.max_versions}")
     print(f"serve: {args.replicas} replicas x {args.slots} slots, "
@@ -101,7 +111,7 @@ def main() -> None:
         )
         rep = run_serve_loop(
             model, store, reqs, router=args.router, pool=pool,
-            seed=args.seed + ci,
+            seed=args.seed + ci, faults=serve_faults,
         )
         reports.append(rep)
         loss = float(np.asarray(aux["loss"])[-1])
@@ -126,6 +136,13 @@ def main() -> None:
     last = reports[-1].serve_stats
     print(f"per-replica E[X]: "
           f"{', '.join(f'{v:.2f}' for v in last['replica_mean_X'])}")
+    crashes = sum(rep.serve_stats["crashes"] for rep in reports)
+    failed_over = sum(rep.serve_stats["failed_over"] for rep in reports)
+    ring_miss = reports[-1].serve_stats["ring_miss"]
+    if crashes or ring_miss:
+        print(f"degradation: {crashes} replica crashes, {failed_over} "
+              f"streams failed over ({pool.n_alive()}/{args.replicas} "
+              f"replicas alive), {ring_miss} ring-miss reads")
     if args.out:
         dump_json(args.out, {
             "cli_args": vars(args),

@@ -50,12 +50,20 @@ from repro.serve.store import VersionStore
 
 @dataclasses.dataclass
 class Request:
-    """One inference request of the open-loop arrival process."""
+    """One inference request of the open-loop arrival process.
+
+    ``resume`` carries the interrupted stream dict of a request being
+    failed over from a crashed replica: the prompt is the original prompt
+    plus every token already generated, ``gen_len`` the tokens still
+    owed, and the join stitches the prior stream's history back on so the
+    completed ``StreamResult`` is indistinguishable from an uninterrupted
+    run (bit-for-bit when the new replica pins the same version)."""
 
     rid: int
     tick: int  # arrival tick
     prompt: np.ndarray  # (P,) int32 prompt tokens
     gen_len: int  # tokens to generate (>= 1)
+    resume: Optional[Dict] = None  # interrupted stream being failed over
 
 
 @dataclasses.dataclass
@@ -70,6 +78,7 @@ class StreamResult:
     first_token_tick: int
     done_tick: int
     tokens: List[int]
+    migrations: int = 0  # replica crashes survived via failover
 
     @property
     def ttft_ticks(self) -> int:
@@ -106,30 +115,61 @@ class ReplicaPool:
         self.params: List = [None] * n_replicas
         self.version = [0] * n_replicas
         self.staleness = [0] * n_replicas
+        self.alive = [True] * n_replicas
+        self.ring_miss = 0  # reads whose requested version fell off the ring
 
     def refresh(self, store: VersionStore) -> None:
         """Re-pin every replica against a fresh ring snapshot: replica i
         serves ``latest - i * stagger`` (clipped to the retained window),
         so a staggered pool covers a spread of stalenesses. In-flight
         streams keep decoding — their KV caches already embed the version
-        they prefilled under, so only *new* joins see the new pin."""
+        they prefilled under, so only *new* joins see the new pin. Dead
+        replicas stay dead and unpinned."""
         for i in range(self.n_replicas):
+            if not self.alive[i]:
+                continue
             read = store.read(store.latest - i * self.stagger)
+            self.ring_miss += int(read.ring_miss)
             self.params[i] = read.params
             self.version[i] = int(read.read_ver)
             self.staleness[i] = int(read.staleness)
 
     def load(self) -> np.ndarray:
-        """(R,) float32 in-flight streams per replica — the router's score."""
+        """(R,) float32 in-flight streams per replica — the router's
+        score. Dead replicas score +inf so every load-aware (and the
+        dead-masked round-robin) router routes around them."""
         return np.asarray(
-            [sum(s is not None for s in a) for a in self.active], np.float32
+            [
+                sum(s is not None for s in a) if self.alive[i] else np.inf
+                for i, a in enumerate(self.active)
+            ],
+            np.float32,
         )
 
     def has_free(self, replica: int) -> bool:
-        return any(s is None for s in self.active[replica])
+        return self.alive[replica] and any(
+            s is None for s in self.active[replica]
+        )
 
     def total_free(self) -> int:
-        return sum(s is None for a in self.active for s in a)
+        return sum(
+            s is None
+            for i, a in enumerate(self.active) if self.alive[i]
+            for s in a
+        )
+
+    def n_alive(self) -> int:
+        return sum(self.alive)
+
+    def crash(self, replica: int) -> List[Dict]:
+        """Kill ``replica``: mark it dead and evict every in-flight
+        stream, returning the interrupted stream dicts so the loop can
+        re-queue them as failover resumes. The replica takes no further
+        joins or decode ticks."""
+        self.alive[replica] = False
+        orphans = [s for s in self.active[replica] if s is not None]
+        self.active[replica] = [None] * self.slots
+        return orphans
 
     def join(self, replica: int, req: Request, tick: int):
         """Admit ``req`` on ``replica``: prefill its prompt into a fresh
@@ -143,15 +183,36 @@ class ReplicaPool:
             self.params[replica], caches, jnp.asarray(req.prompt)[None, :]
         )
         first = int(jnp.argmax(logits[0, -1]))
-        stream = {
-            "rid": req.rid,
-            "arrival": req.tick,
-            "first_tick": tick,
-            "tokens": [first],
-            "remaining": req.gen_len - 1,
-            "version": self.version[replica],
-            "staleness": self.staleness[replica],
-        }
+        if req.resume is not None:
+            # failover: the prompt already holds the original prompt plus
+            # every generated token, so this prefill's argmax is exactly
+            # the next token the dead replica owed. Stitch the prior
+            # stream's history back on; the result keeps its original
+            # arrival/first-token ticks and join-time version.
+            prior = req.resume
+            stream = {
+                "rid": req.rid,
+                "prompt": prior["prompt"],
+                "arrival": prior["arrival"],
+                "first_tick": prior["first_tick"],
+                "tokens": prior["tokens"] + [first],
+                "remaining": req.gen_len - 1,
+                "version": prior["version"],
+                "staleness": prior["staleness"],
+                "migrations": prior["migrations"] + 1,
+            }
+        else:
+            stream = {
+                "rid": req.rid,
+                "prompt": req.prompt,
+                "arrival": req.tick,
+                "first_tick": tick,
+                "tokens": [first],
+                "remaining": req.gen_len - 1,
+                "version": self.version[replica],
+                "staleness": self.staleness[replica],
+                "migrations": 0,
+            }
         if stream["remaining"] == 0:
             return self._result(replica, stream, tick)
         self.pools[replica] = write_slot(self.pools[replica], slot, one)
@@ -194,6 +255,7 @@ class ReplicaPool:
             first_token_tick=stream["first_tick"],
             done_tick=tick,
             tokens=stream["tokens"],
+            migrations=stream.get("migrations", 0),
         )
 
 
@@ -240,6 +302,7 @@ def run_serve_loop(
     stagger: int = 1,
     seed: int = 0,
     pool: Optional[ReplicaPool] = None,
+    faults=None,
 ) -> ServeReport:
     """Drive the continuous-batching loop over an open-loop request trace.
 
@@ -251,7 +314,28 @@ def run_serve_loop(
     ``ReplicaPool`` (compiled ticks and in-flight streams survive across
     calls — pass the same pool between training chunks); otherwise one is
     built and pinned from ``store``.
+
+    ``faults`` takes serve-scope :class:`repro.faults.Fault` records
+    (``replica_crash``): each tick every alive replica crashes with the
+    fault's rate under a dedicated key fold, except the last survivor
+    (the pool must always be able to drain). A crash evicts the replica
+    and re-queues its in-flight streams at the queue head as failover
+    resumes — zero streams are dropped, counted in
+    ``serve_stats["failed_over"]``.
     """
+    crash_rate = 0.0
+    for f in tuple(faults) if faults is not None else ():
+        if getattr(f, "scope", None) != "serve":
+            raise ValueError(
+                f"fault {f.name!r} is engine-scope: pass it to "
+                "RunConfig(faults=...), not the serving loop"
+            )
+        if f.name != "replica_crash":
+            raise ValueError(
+                f"unknown serve-scope fault {f.name!r}; the serving loop "
+                "handles: replica_crash"
+            )
+        crash_rate = float(f.rate)
     requests = sorted(requests, key=lambda r: (r.tick, r.rid))
     if ctx is None:
         ctx = max((len(r.prompt) + r.gen_len for r in requests), default=8)
@@ -266,6 +350,9 @@ def run_serve_loop(
     )
     key = jax.random.PRNGKey(seed)
     k_init, k_dec = jax.random.split(key)
+    # crash draws fold far off k_dec's per-decision fold range so an
+    # armed crash fault never perturbs the routing key stream
+    k_crash = jax.random.fold_in(k_dec, 1 << 24)
     rstate = rt.init(k_init, pool.n_replicas)
     acc = init_replica_accum(pool.n_replicas)
     upd = jax.jit(update_replica_accum)
@@ -275,9 +362,26 @@ def run_serve_loop(
     pending = collections.deque(requests)
     results: List[StreamResult] = []
     decisions = rejections = 0
+    crashes = failed_over = 0
     decode_wall = 0.0
     t = 0
     for t in range(ticks):
+        # --- fault injection: replica crashes, sparing the last survivor
+        if crash_rate > 0.0 and pool.n_alive() > 1:
+            hit = np.asarray(jax.random.bernoulli(
+                jax.random.fold_in(k_crash, t), crash_rate,
+                (pool.n_replicas,),
+            ))
+            for i in range(pool.n_replicas):
+                if not (hit[i] and pool.alive[i]) or pool.n_alive() <= 1:
+                    continue
+                orphans = pool.crash(i)
+                crashes += 1
+                failed_over += len(orphans)
+                # failover resumes go to the queue head, oldest first
+                queue.extendleft(
+                    _resume_request(s) for s in reversed(orphans)
+                )
         while pending and pending[0].tick <= t:
             queue.append(pending.popleft())
         # --- admission: one router decision per queued head request
@@ -307,12 +411,16 @@ def run_serve_loop(
         t0 = time.perf_counter()
         results.extend(pool.decode_tick(t))
         decode_wall += time.perf_counter() - t0
-        if not pending and not queue and pool.total_free() == pool.n_replicas * pool.slots:
+        if not pending and not queue and pool.total_free() == pool.n_alive() * pool.slots:
             break
 
     tokens_out = sum(len(r.tokens) for r in results)
     ttfts = [r.ttft_ticks for r in results]
     stal = [r.staleness for r in results]
+    serve_stats = dict(replica_stats_from_accum(acc))
+    serve_stats["ring_miss"] = pool.ring_miss
+    serve_stats["crashes"] = crashes
+    serve_stats["failed_over"] = failed_over
     return ServeReport(
         results=results,
         ticks=t + 1,
@@ -325,5 +433,22 @@ def run_serve_loop(
         staleness_max=int(max(stal)) if stal else 0,
         decode_wall_s=decode_wall,
         tok_s=tokens_out / decode_wall if decode_wall > 0 else float("nan"),
-        serve_stats=replica_stats_from_accum(acc),
+        serve_stats=serve_stats,
+    )
+
+
+def _resume_request(stream: Dict) -> Request:
+    """Rebuild a crashed replica's in-flight stream as a joinable
+    request: the new prompt is the original prompt plus every token
+    already generated, so the survivor's prefill reconstructs the exact
+    decode context the dead replica held."""
+    return Request(
+        rid=stream["rid"],
+        tick=stream["arrival"],
+        prompt=np.concatenate([
+            np.asarray(stream["prompt"], np.int32),
+            np.asarray(stream["tokens"], np.int32),
+        ]),
+        gen_len=stream["remaining"],
+        resume=stream,
     )

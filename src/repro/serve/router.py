@@ -95,13 +95,22 @@ def router_names() -> Tuple[str, ...]:
 def make_round_robin(n_replicas: int) -> Router:
     """Deterministic cursor: decision d goes to replica d % R. Every
     replica's assignment gap is exactly R — Var[X] = 0, the serving-tier
-    analogue of the ``round_robin`` selection policy."""
+    analogue of the ``round_robin`` selection policy.
+
+    Dead replicas (load = +inf, the pool's crash marker) are skipped:
+    the cursor's pick is the first *alive* replica at or after it, and
+    the decision is -1 when the whole pool is dead. With every replica
+    alive this is exactly ``cursor % R``."""
 
     def init(key, r=n_replicas):
         return {"cursor": jnp.zeros((), jnp.int32)}
 
     def step(state, load, key):
-        idx = (state["cursor"] % n_replicas).astype(jnp.int32)
+        order = (jnp.arange(n_replicas) - state["cursor"]) % n_replicas
+        alive = jnp.isfinite(load)
+        score = jnp.where(alive, -order.astype(jnp.float32), -jnp.inf)
+        idx = jnp.argmax(score).astype(jnp.int32)
+        idx = jnp.where(jnp.any(alive), idx, -1).astype(jnp.int32)
         return idx, {"cursor": state["cursor"] + 1}
 
     return Router("round_robin", init, step)
@@ -110,13 +119,16 @@ def make_round_robin(n_replicas: int) -> Router:
 def make_least_loaded(n_replicas: int) -> Router:
     """Greedy: the replica with the least in-flight load (lowest index on
     ties). Centralized — it reads the whole load vector, the admission
-    analogue of the ``oldest_age`` top-k policy."""
+    analogue of the ``oldest_age`` top-k policy. Dead replicas carry
+    load = +inf and lose every argmin; a fully dead pool rejects (-1)."""
 
     def init(key, r=n_replicas):
         return {}
 
     def step(state, load, key):
-        return jnp.argmin(load).astype(jnp.int32), state
+        idx = jnp.argmin(load).astype(jnp.int32)
+        idx = jnp.where(jnp.any(jnp.isfinite(load)), idx, -1)
+        return idx.astype(jnp.int32), state
 
     return Router("least_loaded", init, step)
 
@@ -158,9 +170,11 @@ def make_markov_admission(
 
     def step(state, load, key):
         willing, state = policy.step(state, key)
-        score = jnp.where(willing, load, jnp.inf)
+        # dead replicas (load = +inf) may be willing but can't serve
+        usable = willing & jnp.isfinite(load)
+        score = jnp.where(usable, load, jnp.inf)
         idx = jnp.argmin(score).astype(jnp.int32)
-        return jnp.where(jnp.any(willing), idx, -1).astype(jnp.int32), state
+        return jnp.where(jnp.any(usable), idx, -1).astype(jnp.int32), state
 
     return Router("markov", init, step)
 

@@ -26,11 +26,14 @@ import jax.numpy as jnp
 
 class VersionRead(NamedTuple):
     """One resolved read: the served parameters, the version they carry,
-    and its age relative to the newest version in the ring."""
+    its age relative to the newest version in the ring, and whether the
+    *requested* version had already fallen off the ring (the read was
+    silently upgraded to the oldest retained model)."""
 
     params: Any
     read_ver: jnp.ndarray  # () int32 — version actually served
     staleness: jnp.ndarray  # () int32 — latest - read_ver
+    ring_miss: jnp.ndarray  # () bool — requested version not retained
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +80,7 @@ class VersionStore:
         h = self.max_versions
         latest = jnp.asarray(self.version, jnp.int32)
         v = jnp.asarray(ver, jnp.int32)
-        read_ver = jnp.clip(v, jnp.maximum(latest - (h - 1), 0), latest)
+        lo = jnp.maximum(latest - (h - 1), 0)
+        read_ver = jnp.clip(v, lo, latest)
         params = jax.tree.map(lambda leaf: leaf[read_ver % h], self.hist)
-        return VersionRead(params, read_ver, latest - read_ver)
+        return VersionRead(params, read_ver, latest - read_ver, v < lo)

@@ -1,8 +1,8 @@
 """Tier reductions and per-hop latency: the jnp half of ``repro.topo``.
 
 ``tiered_apply`` turns a :class:`~repro.topo.graph.Topology` into the
-engines' ``aggregate(global_params, updates, bases, w, idx) -> params``
-hook. It is pure *reduction structure* over the existing aggregator
+engines' ``aggregate(global_params, updates, bases, w, idx) ->
+(params, stats)`` hook. It is pure *reduction structure* over the existing aggregator
 protocol — no new aggregator math:
 
   1. every cohort slot becomes its own additive accumulator
@@ -41,7 +41,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.engine.aggregators import Aggregator
+from repro.engine.aggregators import Aggregator, acc_stats
 from repro.sim import latency as lat_mod
 from repro.topo.graph import Topology
 
@@ -157,7 +157,7 @@ def tiered_apply(
             acc = jax.tree.map(lambda a: a[0] * e0, acc)
         else:
             acc = jax.tree.map(lambda a: a.sum(axis=0), acc)
-        return agg.finalize(g, acc)
+        return agg.finalize(g, acc), acc_stats(acc)
 
     return apply
 

@@ -216,7 +216,7 @@ def test_cohort_sharded_apply_matches_inline():
     )
     w = jnp.asarray([1.0, 0.0] * SHARDS)
     inline = agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
-    sharded = cohort_sharded_apply(agg, mesh, dist.FLEET_AXIS)(
+    sharded, _ = cohort_sharded_apply(agg, mesh, dist.FLEET_AXIS)(
         g, updates, bases, w
     )
     _assert_trees_close(sharded, inline)

@@ -301,3 +301,94 @@ def test_prefill_scan_matches_per_token_loop(lm):
     np.testing.assert_array_equal(np.asarray(lg_scan), np.asarray(lg_loop))
     for a, b in zip(jax.tree.leaves(c_scan), jax.tree.leaves(c_loop)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replica_crash_failover_drops_no_streams(lm):
+    """Satellite + tentpole acceptance: replica crashes mid-decode drop
+    zero in-flight streams — orphans re-enter the queue head and resume
+    on survivors through the join path, and at stagger=0 (all replicas
+    pin the same version) every stream's tokens stay bit-for-bit the
+    crash-free run's."""
+    from repro.faults import make_fault
+
+    model, params = lm
+    store = _store(params, h=4, latest=3)
+    key = jax.random.PRNGKey(11)
+    reqs = [
+        Request(
+            rid=i, tick=i % 3,
+            prompt=np.asarray(
+                jax.random.randint(
+                    jax.random.fold_in(key, i), (5,), 0, ARCH.vocab_size
+                )
+            ),
+            gen_len=3 + (i % 3),
+        )
+        for i in range(8)
+    ]
+    ctx = max(len(r.prompt) + r.gen_len for r in reqs)
+    kw = dict(router="round_robin", n_replicas=3, slots=2, ctx=ctx,
+              stagger=0, seed=0)
+    calm = run_serve_loop(model, store, reqs, **kw)
+    chaos = run_serve_loop(
+        model, store, reqs,
+        faults=[make_fault("replica_crash", 3, 0.15)], **kw,
+    )
+    assert chaos.serve_stats["crashes"] > 0
+    assert chaos.serve_stats["failed_over"] > 0
+    # zero dropped streams: every request completes despite the crashes
+    assert len(chaos.results) == len(reqs)
+    assert chaos.queue_left == 0
+    assert sum(r.migrations for r in chaos.results) >= \
+        chaos.serve_stats["failed_over"]
+    calm_tokens = {r.rid: r.tokens for r in calm.results}
+    for res in chaos.results:
+        assert res.tokens == calm_tokens[res.rid], \
+            f"stream {res.rid} diverged across failover"
+
+
+def test_serve_loop_rejects_engine_scope_faults(lm):
+    from repro.faults import make_fault
+
+    model, params = lm
+    store = _store(params, h=4, latest=3)
+    with pytest.raises(ValueError, match="engine-scope"):
+        run_serve_loop(model, store, [],
+                       faults=[make_fault("dropout", 4, 0.1)])
+
+
+def test_ring_miss_counted_at_staleness_ge_h(lm):
+    """Satellite regression: a replica pinned ``stagger >= H`` behind the
+    head asks for a version that fell off the ring — the read clips to
+    the oldest retained slot AND flags ``ring_miss``, surfaced in
+    ``serve_stats`` instead of silently serving the wrong version."""
+    model, params = lm
+    h = 4
+    store = _store(params, h=h, latest=10)  # retained: 7..10
+    # direct flag: v >= lo clean, v < lo is a miss
+    assert not bool(store.read(7).ring_miss)
+    assert bool(store.read(6).ring_miss)
+    key = jax.random.PRNGKey(13)
+    reqs = [
+        Request(
+            rid=i, tick=i,
+            prompt=np.asarray(
+                jax.random.randint(
+                    jax.random.fold_in(key, i), (4,), 0, ARCH.vocab_size
+                )
+            ),
+            gen_len=2,
+        )
+        for i in range(2)
+    ]
+    report = run_serve_loop(
+        model, store, reqs, router="round_robin", n_replicas=2, slots=2,
+        ctx=8, stagger=h, seed=0,
+    )
+    # replica 1 pins latest - h < lo: its refresh read is a ring miss
+    assert report.serve_stats["ring_miss"] >= 1
+    calm = run_serve_loop(
+        model, store, reqs, router="round_robin", n_replicas=2, slots=2,
+        ctx=8, stagger=1, seed=0,
+    )
+    assert calm.serve_stats["ring_miss"] == 0

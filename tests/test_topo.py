@@ -246,7 +246,7 @@ def test_tiered_apply_matches_flat_reduction(make_agg, tiers):
     topo = make_topology("hierarchical", tiers=tiers)
     g, updates, bases, w, idx = _toy_cohort(0)
     flat = agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
-    tiered = tiered_apply(agg, topo, N)(g, updates, bases, w, idx)
+    tiered, _ = tiered_apply(agg, topo, N)(g, updates, bases, w, idx)
     _assert_trees_close(tiered, flat)
 
 
@@ -255,7 +255,7 @@ def test_tiered_apply_unstacked_bases_matches_flat():
     topo = make_topology("hierarchical", tiers=(4,))
     g, updates, _, w, idx = _toy_cohort(1)
     flat = agg.finalize(g, agg.accumulate(agg.init(g), updates, g, w))
-    tiered = tiered_apply(agg, topo, N, stacked_bases=False)(
+    tiered, _ = tiered_apply(agg, topo, N, stacked_bases=False)(
         g, updates, g, w, idx
     )
     _assert_trees_close(tiered, flat)
@@ -268,7 +268,7 @@ def test_gossip_converges_to_flat_reduction():
     topo = make_topology("gossip", nodes=4, degree=2, rounds=64)
     g, updates, bases, w, idx = _toy_cohort(2)
     flat = agg.finalize(g, agg.accumulate(agg.init(g), updates, bases, w))
-    gossiped = tiered_apply(agg, topo, N)(g, updates, bases, w, idx)
+    gossiped, _ = tiered_apply(agg, topo, N)(g, updates, bases, w, idx)
     _assert_trees_close(gossiped, flat)
 
 
@@ -312,8 +312,8 @@ def test_tier_permutation_invariance_hypothesis():
                                max_size=b)),
             jnp.int32,
         )
-        base = apply(g, updates, bases, w, idx)
-        permuted = apply(g, updates, bases, w, jnp.asarray(perm)[idx])
+        base, _ = apply(g, updates, bases, w, idx)
+        permuted, _ = apply(g, updates, bases, w, jnp.asarray(perm)[idx])
         _assert_trees_close(permuted, base)
 
     check()
