@@ -1,0 +1,213 @@
+"""Adaptive defense tier benchmarks.
+
+Three questions, one section:
+
+  (a) what does arming the defense tier cost per engine step on a calm
+      fleet — reputation scoring, the quarantine chain, and the mtd
+      pressure window riding the donated scan carry vs the identical
+      defense-free engine (the committed row pins the ratio; the
+      acceptance budget is <= 1.10x);
+  (b) detection quality: under a pinned 25% attacker mix, what fraction
+      of the *truly hit* clients ends up quarantined/probation (recall)
+      and how many honest clients get dragged in (false-positive rate) —
+      ground truth comes from the per-client fault-exposure tallies;
+  (c) convergence: adaptive (reputation exclusion + moving-target trim)
+      vs the best static robust aggregator vs plain fedavg under the
+      same attack — the defense must land within 10% of the static
+      trimmed mean's eval loss while fedavg loses the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNN_CONFIGS
+from repro.data.synthetic import make_image_dataset
+from repro.engine import RunConfig, SyncEngine, make_engine, run_engine
+from repro.fl import make_cnn_task
+
+# the same pinned replacement attack bench_faults uses: sign-flipped,
+# boosted deltas from a fixed susceptible quarter of the fleet
+ATTACK_FACTOR = -3.0
+ATTACK_FRAC = 0.25
+# two-fault mix: independent prone draws at this frac give a ~25% union
+MIX_FRAC = 0.134
+
+# defense knobs for every armed row: one strong observation puts a
+# client at rep 0.5, a second pushes it over the threshold — repeated
+# evidence, not one unlucky cohort
+DEFENSE = {"threshold": 0.55, "ewma": 0.5}
+MTD = {"mtd": True, "mtd_window": 4, "mtd_trims": (0.0, 0.15, 0.25, 0.35),
+       "mtd_up": 0.1, "mtd_down": 0.02}
+
+
+def _mini_task(seed: int = 0):
+    base = CNN_CONFIGS["paper-cnn-mnist"]
+    cnn = dataclasses.replace(
+        base, name=base.name + "-defense-mini", image_size=16,
+        conv_channels=(8, 16), fc_width=64,
+    )
+    train, test = make_image_dataset(
+        "mnist-defense-mini", base.num_classes, 16, base.channels,
+        2000, 1000, seed=seed, difficulty=0.9,
+    )
+    return make_cnn_task(cnn, train, test, 100, seed=seed)
+
+
+def _time_chunks(engines, chunk: int, trials: int):
+    """Per-step medians, trials interleaved (shared boxes drift)."""
+    snaps = []
+    for eng in engines:
+        state = eng.init()
+        state, _ = eng.run_chunk(state, 0, chunk, False)  # compile + warm
+        jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+        snaps.append(state)
+    times = [[] for _ in engines]
+    for _ in range(trials):
+        for i, eng in enumerate(engines):
+            st = jax.tree.map(jnp.copy, snaps[i])  # run_chunk donates
+            t0 = time.time()
+            _, aux = eng.run_chunk(st, chunk, chunk, False)
+            _ = jax.device_get(aux)
+            times[i].append((time.time() - t0) / chunk * 1e6)
+    return [float(np.median(t)) for t in times]
+
+
+def _detection_row(task, label, faults, fault_kwargs, rounds):
+    """One detection-quality row: run armed defense against the attack,
+    score quarantine decisions against the exposure ground truth."""
+    cfg = RunConfig(
+        n_clients=100, k=15, m=10, policy="markov", rounds=rounds,
+        local_epochs=1, batch_size=10, eval_every=rounds,
+        faults=faults, fault_rate=1.0, fault_kwargs=fault_kwargs,
+        fault_exposure=True, defense=True, defense_kwargs=dict(DEFENSE),
+    )
+    t0 = time.time()
+    res = run_engine(SyncEngine(task, cfg))
+    dt = time.time() - t0
+    hit = np.zeros(100, bool)
+    for exp in res.fault_exposure.values():
+        hit |= exp > 0
+    suspect = res.defense["status"] != 0
+    tp = int((suspect & hit).sum())
+    fp = int((suspect & ~hit).sum())
+    recall = tp / max(int(hit.sum()), 1)
+    precision = tp / max(tp + fp, 1)
+    fpr = fp / max(int((~hit).sum()), 1)
+    print(f"  {label:12s}: {int(hit.sum())} clients hit -> "
+          f"recall={recall:.2f} precision={precision:.2f} fpr={fpr:.3f} "
+          f"(inflow {int(res.load_stats['def_quarantine_inflow'])}, "
+          f"{dt:.1f}s)")
+    return (
+        f"defense_detection_{label}", 0.0,
+        f"recall={recall:.2f};precision={precision:.2f};fpr={fpr:.3f}",
+    )
+
+
+def run(csv_rows, rounds: int = 12, trials: int = 3):
+    task = _mini_task()
+
+    # --- (a) armed-defense overhead per async step on a calm fleet -------
+    def acfg(**kw):
+        return RunConfig(
+            n_clients=100, k=15, m=10, policy="markov", rounds=64,
+            local_epochs=1, batch_size=10, eval_every=64, mode="async",
+            profile="mobile", collect_history=False, **kw,
+        )
+
+    calm = make_engine(task, acfg())
+    armed = make_engine(task, acfg(
+        defense=True, defense_kwargs={**DEFENSE, **MTD},
+    ))
+    print("\n== defense: armed-tier overhead per async step "
+          "(n=100, calm fleet, reputation + quarantine + mtd) ==")
+    t_calm, t_armed = _time_chunks([calm, armed], chunk=8, trials=trials)
+    ratio = t_armed / t_calm if t_calm else float("nan")
+    print(f"  calm  : {t_calm:9.1f}us/step")
+    print(f"  armed : {t_armed:9.1f}us/step ({ratio:.2f}x)")
+    csv_rows.append(("defense_step_n100_calm", t_calm, ""))
+    csv_rows.append(("defense_step_n100_armed", t_armed, f"{ratio:.3f}x"))
+
+    # --- (b) detection precision/recall per attack fault -----------------
+    det_rounds = max(2 * rounds, 24)
+    print(f"\n== defense: detection quality vs exposure ground truth "
+          f"(n=100, ~25% attackers, rounds={det_rounds}) ==")
+    csv_rows.append(_detection_row(
+        task, "scale_attack", ("scale_attack",),
+        {"scale_attack": {"factor": ATTACK_FACTOR,
+                          "client_frac": ATTACK_FRAC}},
+        det_rounds,
+    ))
+    csv_rows.append(_detection_row(
+        task, "sign_flip", ("sign_flip",),
+        {"sign_flip": {"client_frac": ATTACK_FRAC}},
+        det_rounds,
+    ))
+    csv_rows.append(_detection_row(
+        task, "scale_sign", ("scale_attack", "sign_flip"),
+        {"scale_attack": {"factor": ATTACK_FACTOR, "client_frac": MIX_FRAC},
+         "sign_flip": {"client_frac": MIX_FRAC}},
+        det_rounds,
+    ))
+
+    # --- (c) convergence: adaptive vs static robust vs fedavg ------------
+    conv_rounds = max(2 * rounds, 24)
+    print(f"\n== defense: convergence under the replacement attack "
+          f"(scale_attack x{ATTACK_FACTOR}, frac={ATTACK_FRAC}, "
+          f"rounds={conv_rounds}) — adaptive vs static ==")
+
+    def converge(label, **kw):
+        cfg = RunConfig(
+            n_clients=100, k=15, m=10, policy="markov", rounds=conv_rounds,
+            local_epochs=2, batch_size=10,
+            eval_every=max(conv_rounds // 4, 1),
+            faults=("scale_attack",), fault_rate=1.0,
+            fault_kwargs={"scale_attack": {"factor": ATTACK_FACTOR,
+                                           "client_frac": ATTACK_FRAC}},
+            **kw,
+        )
+        t0 = time.time()
+        res = run_engine(SyncEngine(task, cfg))
+        last = res.records[-1]
+        extra = ""
+        if res.load_stats.get("def_quarantine_inflow") is not None:
+            extra = (f", quarantined {int(res.load_stats['def_quarantine_inflow'])}"
+                     f", mtd level {int(res.load_stats['def_mtd_level'])}")
+        print(f"  {label:14s}: eval_loss={last.eval_loss:.4f} "
+              f"acc={last.accuracy:.4f} ({time.time() - t0:.1f}s{extra})")
+        return last
+
+    losses = {}
+    for label, kw in (
+        ("fedavg", {}),
+        ("trimmed_mean", {"aggregator": "trimmed_mean",
+                          "aggregator_kwargs": {"trim": 0.35}}),
+        ("adaptive", {"defense": True,
+                      "defense_kwargs": {**DEFENSE, **MTD}}),
+    ):
+        last = converge(label, **kw)
+        losses[label] = last.eval_loss
+        csv_rows.append((
+            f"defense_convergence_attack_{label}", 0.0,
+            f"loss={last.eval_loss:.4f};acc={last.accuracy:.4f}",
+        ))
+    static = losses["trimmed_mean"]
+    adaptive = losses["adaptive"]
+    # the defense must land within 10% of the static robust loss while
+    # fedavg (mean cancelled by the attackers) does strictly worse
+    within = np.isfinite(adaptive) and adaptive <= static * 1.10
+    beats_fedavg = (adaptive < losses["fedavg"]
+                    or not np.isfinite(losses["fedavg"]))
+    ok = within and beats_fedavg
+    print(f"  adaptive {'recovers' if ok else 'DOES NOT recover'}: "
+          f"loss {adaptive:.4f} vs static {static:.4f} "
+          f"vs fedavg {losses['fedavg']:.4f}")
+    csv_rows.append((
+        "defense_adaptive_recovers", 0.0,
+        f"{'yes' if ok else 'NO'};adaptive={adaptive:.4f};"
+        f"static={static:.4f};fedavg={losses['fedavg']:.4f}",
+    ))

@@ -35,6 +35,10 @@ REQUIRED_BASELINE_ROWS = (
     # evidence row (robust aggregation recovering what fedavg loses)
     "faults_step_n100_chaos",
     "faults_robust_recovers_replacement",
+    # defense tier: armed-reputation step cost on a calm fleet + the
+    # adaptive-vs-static-vs-fedavg recovery evidence row
+    "defense_step_n100_armed",
+    "defense_adaptive_recovers",
 )
 
 
@@ -93,7 +97,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: variance,scheduler,kernels,convergence,"
-                         "roofline,async,sharded,topo,serve,faults")
+                         "roofline,async,sharded,topo,serve,faults,defense")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--out", default=None,
@@ -153,6 +157,10 @@ def main() -> None:
         from benchmarks import bench_faults
 
         bench_faults.run(csv_rows, rounds=args.rounds)
+    if on("defense"):
+        from benchmarks import bench_defense
+
+        bench_defense.run(csv_rows, rounds=args.rounds)
     if on("roofline"):
         from benchmarks import bench_roofline
 

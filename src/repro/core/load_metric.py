@@ -222,6 +222,21 @@ def _kahan_add(sum_, comp, x):
     return t, (t - sum_) - y
 
 
+def ewma_scatter_update(vec, idx, values, mask, alpha):
+    """Masked scatter-EWMA over an (n,) per-client statistic.
+
+    ``vec[idx[j]] <- (1 - alpha) * vec[idx[j]] + alpha * values[j]`` for
+    every slot with ``mask[j]``; other slots (padding, failed cohort
+    members) contribute an exact add-of-zero, so duplicate/padded idx
+    entries are race-free and an all-False mask is bitwise identity.
+    jit/scan-compatible; used by the defense tier's reputation scores.
+    """
+    import jax.numpy as jnp
+
+    delta = jnp.where(mask, alpha * (values - vec[idx]), 0.0)
+    return vec.at[idx].add(delta.astype(vec.dtype), mode="drop")
+
+
 def init_selection_accum(n: int, expected_cohort: int = 0):
     """Fresh accumulator pytree for an ``n``-client fleet.
 

@@ -1,0 +1,29 @@
+"""Adaptive defense tier: per-client reputation, quarantine with a
+probation Markov chain, and moving-target aggregation — all riding the
+engines' donated scan carry (see :mod:`repro.defense.reputation`).
+
+The package import is lazy so ``RunConfig``'s eager defense validation
+(``repro.defense.config`` is a plain dataclass module) stays jax-free;
+the jnp runtime loads only when an engine builds it.
+"""
+from repro.defense.config import DefenseConfig
+
+__all__ = [
+    "DEFENSE_FOLD",
+    "Defense",
+    "DefenseConfig",
+    "adaptive_aggregate",
+    "make_defense",
+]
+
+
+def __getattr__(name):
+    if name in ("DEFENSE_FOLD", "Defense", "make_defense"):
+        from repro.defense import reputation
+
+        return getattr(reputation, name)
+    if name == "adaptive_aggregate":
+        from repro.defense.adaptive import adaptive_aggregate
+
+        return adaptive_aggregate
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,66 @@
+"""Moving-target aggregation: rotate the robust rule online.
+
+``adaptive_aggregate`` wraps the engines' aggregate hook. Level 0 on
+the mtd trim ladder is the configured base rule, selected through
+``lax.cond`` so a calm fleet never pays for (or perturbs — the taken
+branch is bitwise) the alternative; level L >= 1 swaps in a trimmed
+mean whose trim fraction is read from the ladder *inside* the jitted
+step — the rotation is carry state, not a recompile.
+
+The trimmed mean here is the dynamic-trim twin of
+``engine.robust.make_trimmed_mean``: identical sort/rank arithmetic,
+but ``trim`` is a traced scalar. It is an order statistic over the
+whole cohort axis, hence non-additive — config rejects mtd under
+tiered topologies and cohort-sharded aggregation up front.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.aggregators import tree_where
+
+
+def _trimmed_mean_delta(g, updates, bases, w, trim):
+    """g + per-coordinate trimmed mean of valid deltas, traced trim."""
+    valid = w > 0
+    c = valid.astype(jnp.int32).sum()
+    cf = c.astype(jnp.float32)
+    t = jnp.clip(jnp.floor(cf * trim).astype(jnp.int32), 0,
+                 jnp.maximum((c - 1) // 2, 0))
+
+    def one(gl, u, b):
+        ws = (-1,) + (1,) * (u.ndim - 1)
+        d = jnp.where(valid.reshape(ws), (u - b).astype(jnp.float32),
+                      jnp.inf)
+        d_sorted = jnp.sort(d, axis=0)
+        ranks = jnp.arange(u.shape[0]).reshape(ws)
+        keep = (ranks >= t) & (ranks < c - t)
+        mean = jnp.where(keep, d_sorted, 0.0).sum(axis=0) \
+            / jnp.maximum(c - 2 * t, 1)
+        return (gl + mean.astype(gl.dtype)).astype(gl.dtype)
+
+    moved = jax.tree.map(one, g, updates, bases)
+    return tree_where(c > 0, moved, g)  # empty cohort: params stand
+
+
+def adaptive_aggregate(base_apply, trims):
+    """Wrap an engine aggregate hook with the mtd ladder.
+
+    Returns ``apply(g, updates, bases, w, idx, level)``; the base
+    rule's stats are surfaced whatever the level, so counters like
+    ``agg_clipped`` keep their meaning while the ladder is hot.
+    """
+    trims_dev = jnp.asarray(trims, jnp.float32)
+
+    def apply(g, updates, bases, w, idx, level):
+        base_params, stats = base_apply(g, updates, bases, w, idx)
+        params = jax.lax.cond(
+            level > 0,
+            lambda: _trimmed_mean_delta(g, updates, bases, w,
+                                        trims_dev[level]),
+            lambda: base_params,
+        )
+        return params, stats
+
+    return apply

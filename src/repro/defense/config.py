@@ -1,0 +1,84 @@
+"""Defense configuration — deliberately jax-free.
+
+``RunConfig.resolved_defense()`` builds this eagerly in ``__post_init__``
+(the same pattern as topology resolution), so a bad knob fails at config
+time without importing jax; the jnp runtime in
+:mod:`repro.defense.reputation` is only constructed by the engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseConfig:
+    """Knobs for the detect -> quarantine -> adapt loop.
+
+    Detection: per-client reputation is an EWMA (weight ``ewma`` on the
+    newest observation) of per-cohort-slot anomaly scores in [0, 1].
+    Quarantine: reputation above ``threshold`` moves a client to
+    quarantined (excluded from selection AND aggregation); a quarantined
+    client's reputation decays passively by ``q_decay`` per step and it
+    moves to probation with per-step probability ``p_probation``.
+    Probation clients are selectable again (so they generate fresh
+    evidence) but stay excluded from aggregation until re-admitted with
+    probability ``p_readmit`` while their reputation sits at or below the
+    threshold; a probation client whose reputation crosses the threshold
+    relapses to quarantine. ``threshold=inf`` arms the machinery without
+    ever triggering it (bitwise-calm by construction).
+
+    Moving-target defense (``mtd``): windowed attack pressure (suspect
+    slot mass + quarantine inflow per observed slot over ``mtd_window``
+    steps) walks a trim-fraction ladder ``mtd_trims``; level 0 is the
+    engine's configured aggregator untouched, level L swaps in a trimmed
+    mean at ``mtd_trims[L]``.
+    """
+
+    threshold: float = 0.55
+    ewma: float = 0.8
+    q_decay: float = 0.985
+    p_probation: float = 0.15
+    p_readmit: float = 0.5
+    clip: float = 0.0        # >0: delta norms above this score 1.0 outright
+    stale_gain: float = 0.0  # >0: staleness feeds the anomaly score
+    mtd: bool = False
+    mtd_window: int = 8
+    mtd_trims: Tuple[float, ...] = (0.0, 0.1, 0.2, 0.35)
+    mtd_up: float = 0.15
+    mtd_down: float = 0.05
+
+    def __post_init__(self):
+        if not (self.threshold > 0.0):
+            raise ValueError(
+                f"defense threshold must be > 0 (inf disarms the trigger), "
+                f"got {self.threshold}")
+        if not (0.0 < self.ewma <= 1.0):
+            raise ValueError(f"defense ewma must be in (0, 1], got {self.ewma}")
+        if not (0.0 < self.q_decay <= 1.0):
+            raise ValueError(
+                f"defense q_decay must be in (0, 1], got {self.q_decay}")
+        for nm in ("p_probation", "p_readmit"):
+            v = getattr(self, nm)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"defense {nm} must be in [0, 1], got {v}")
+        if self.clip < 0.0 or not math.isfinite(self.clip):
+            raise ValueError(f"defense clip must be finite >= 0, got {self.clip}")
+        if not (0.0 <= self.stale_gain <= 1.0):
+            raise ValueError(
+                f"defense stale_gain must be in [0, 1], got {self.stale_gain}")
+        if self.mtd_window < 1:
+            raise ValueError(
+                f"defense mtd_window must be >= 1, got {self.mtd_window}")
+        object.__setattr__(self, "mtd_trims", tuple(self.mtd_trims))
+        if not self.mtd_trims:
+            raise ValueError("defense mtd_trims must be non-empty")
+        for t in self.mtd_trims:
+            if not (0.0 <= t < 0.5):
+                raise ValueError(
+                    f"defense mtd_trims entries must be in [0, 0.5), got {t}")
+        if not (0.0 <= self.mtd_down <= self.mtd_up <= 1.0):
+            raise ValueError(
+                f"defense needs 0 <= mtd_down <= mtd_up <= 1, got "
+                f"down={self.mtd_down} up={self.mtd_up}")

@@ -1,0 +1,210 @@
+"""Per-client reputation, quarantine, and probation — the jnp runtime.
+
+The ``Defense`` object is the engines' counterpart of ``FaultSet``: its
+state dict rides the donated scan carry (``state["defense"]``), every
+random draw lives on a dedicated key fold (108 off the per-step
+selection key, sub-folds 0/1 for the probation/readmit coins), and every
+armed effect is applied through ``jnp.where`` / ``& ~mask`` seams so an
+armed-but-never-triggered defense leaves the training stream bit-for-bit
+the calm run.
+
+State layout (``(n,)`` leaves shard ``P(fleet)`` under the sharded
+engine via the usual shape[0]==n rule; scalars replicate):
+
+  rep         (n,) f32  EWMA anomaly score in [0, 1]
+  status      (n,) i32  0 active / 1 quarantined / 2 probation
+  quarantined ()   f32  cumulative quarantine inflow (incl. relapses)
+  readmitted  ()   f32  cumulative probation -> active re-admissions
+  pressure    ()   f32  windowed attack-pressure accumulator (mtd)
+  win_obs     ()   f32  windowed observed-slot count (mtd)
+  win         ()   i32  steps into the current mtd window
+  level       ()   i32  current rung on the mtd trim ladder
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.load_metric import ewma_scatter_update
+from repro.defense.config import DefenseConfig
+
+DEFENSE_FOLD = 108  # per-step key fold off k_sel, after faults (105) + rd
+
+
+def _slot_scores(updated, bases, valid, staleness, cfg: DefenseConfig):
+    """Per-cohort-slot anomaly scores in [0, 1].
+
+    Two signals, OR-combined: (a) the slot delta's L2-norm z-score
+    against the cohort's median/MAD norm, (b) misalignment (cosine) with
+    the cohort's robust center — a norm-clipped mean, which a minority
+    of scaled/flipped attackers cannot steer the way they cancel the
+    plain mean. Optional staleness and hard-clip terms ride on top.
+    ``bases`` may be stacked ``(B, ...)`` (async dispatch snapshots) or
+    the unstacked global params (sync); both broadcast.
+    """
+    lu, lb = jax.tree.leaves(updated), jax.tree.leaves(bases)
+    deltas = [(u - b).astype(jnp.float32) for u, b in zip(lu, lb)]
+    nonb = lambda d: tuple(range(1, d.ndim))  # noqa: E731
+    sq = sum(jnp.sum(d * d, axis=nonb(d)) for d in deltas)
+    norm = jnp.sqrt(sq)  # (B,)
+
+    # median + MAD of valid slot norms (scalar sorts, invalid -> +inf)
+    vcount = valid.astype(jnp.int32).sum()
+    lo = jnp.maximum((vcount - 1) // 2, 0)
+    hi = jnp.maximum(vcount // 2, 0)
+    ns = jnp.sort(jnp.where(valid, norm, jnp.inf))
+    nmed = jnp.where(vcount > 0, (ns[lo] + ns[hi]) / 2.0, 0.0)
+    ads = jnp.sort(jnp.where(valid, jnp.abs(norm - nmed), jnp.inf))
+    nmad = jnp.where(vcount > 0, (ads[lo] + ads[hi]) / 2.0, 0.0)
+    scale = jnp.maximum(1.4826 * nmad, 0.05 * nmed + 1e-6)
+    z = jnp.maximum((norm - nmed) / scale, 0.0)
+    s_norm = z / (z + 3.0)
+
+    # robust center: mean of deltas with norms clipped to the median —
+    # O(B * params), no per-coordinate sort on the hot path
+    cw = jnp.where(valid, jnp.minimum(1.0, nmed / jnp.maximum(norm, 1e-12)),
+                   0.0) / jnp.maximum(vcount.astype(jnp.float32), 1.0)
+    center = [jnp.tensordot(cw, d, axes=1) for d in deltas]
+    dot = sum(jnp.sum(d * m, axis=nonb(d)) for d, m in zip(deltas, center))
+    cnorm = jnp.sqrt(sum(jnp.sum(m * m) for m in center))
+    cos = dot / (norm * cnorm + 1e-12)
+    # one-sided robust z of the cosine: honest slots cluster around the
+    # cohort's median alignment (whatever SGD noise makes it); suspicion
+    # is pointing *away* from it. Raw cosine thresholds cannot separate
+    # a sign-flipper from high-dimensional gradient noise — the z-score
+    # against the cohort's own cosine spread can.
+    cs = jnp.sort(jnp.where(valid, cos, jnp.inf))
+    cmed = jnp.where(vcount > 0, (cs[lo] + cs[hi]) / 2.0, 0.0)
+    cads = jnp.sort(jnp.where(valid, jnp.abs(cos - cmed), jnp.inf))
+    cmad = jnp.where(vcount > 0, (cads[lo] + cads[hi]) / 2.0, 0.0)
+    cscale = jnp.maximum(1.4826 * cmad, 0.05)
+    # sharper shaping than the norm channel: a flipped delta's cosine z
+    # saturates near 3-5 once honest alignment shrinks late in training
+    # (the norm z of a scaled attack runs 10x that), so z/(z+3) would
+    # plateau just under any usable threshold
+    zc = jnp.maximum((cmed - cos) / cscale, 0.0)
+    s_dir = zc / (zc + 1.5)
+
+    score = 1.0 - (1.0 - s_norm) * (1.0 - s_dir)
+    if cfg.stale_gain > 0.0:
+        st = staleness.astype(jnp.float32)
+        score = jnp.maximum(score, cfg.stale_gain * (1.0 - (1.0 + st) ** -0.5))
+    if cfg.clip > 0.0:
+        score = jnp.where(norm > cfg.clip, 1.0, score)
+    return score
+
+
+class Defense:
+    """Stateful detect -> quarantine -> adapt loop for one fleet."""
+
+    def __init__(self, n: int, cfg: DefenseConfig):
+        self.n = int(n)
+        self.cfg = cfg
+
+    @property
+    def mtd(self) -> bool:
+        return self.cfg.mtd
+
+    def init(self):
+        n = self.n
+        z = jnp.zeros(())
+        return {
+            "rep": jnp.zeros((n,), jnp.float32),
+            "status": jnp.zeros((n,), jnp.int32),
+            "quarantined": z, "readmitted": z,
+            "pressure": z, "win_obs": z,
+            "win": jnp.zeros((), jnp.int32),
+            "level": jnp.zeros((), jnp.int32),
+        }
+
+    def blocked(self, dstate):
+        """(n,) bool — barred from selection (quarantined only;
+        probation clients are selectable so they generate evidence)."""
+        return dstate["status"] == 1
+
+    def observe(self, dstate, key, updated, bases, idx, valid, staleness):
+        """Score the cohort, update reputation, run the quarantine
+        chain, and advance the mtd pressure window.
+
+        Returns ``(dstate, excluded)`` where ``excluded`` is the (n,)
+        post-transition suspect mask (status != 0) the caller must apply
+        to the aggregation validity — the same seam heartbeat dark
+        clients use.
+        """
+        cfg = self.cfg
+        scores = _slot_scores(updated, bases, valid, staleness, cfg)
+
+        status = dstate["status"]
+        # passive decay while benched, then fresh evidence (probation
+        # clients can be observed; the scatter is add-of-zero for
+        # invalid slots, so padded/duplicate idx slots are safe)
+        rep = jnp.where(status != 0, dstate["rep"] * cfg.q_decay,
+                        dstate["rep"])
+        rep = ewma_scatter_update(rep, idx, scores, valid, cfg.ewma)
+
+        k_prob, k_read = (jax.random.fold_in(key, 0),
+                          jax.random.fold_in(key, 1))
+        hot = rep > cfg.threshold
+        to_quar = (status == 0) & hot
+        relapse = (status == 2) & hot
+        to_prob = (status == 1) & jax.random.bernoulli(
+            k_prob, cfg.p_probation, (self.n,))
+        to_active = ((status == 2) & ~hot
+                     & jax.random.bernoulli(k_read, cfg.p_readmit, (self.n,)))
+        status = jnp.where(
+            to_quar | relapse, 1,
+            jnp.where(to_prob, 2, jnp.where(to_active, 0, status)))
+        inflow = (to_quar | relapse).sum(dtype=jnp.float32)
+        readmits = to_active.sum(dtype=jnp.float32)
+
+        out = {
+            **dstate, "rep": rep, "status": status,
+            "quarantined": dstate["quarantined"] + inflow,
+            "readmitted": dstate["readmitted"] + readmits,
+        }
+        if cfg.mtd:
+            press = dstate["pressure"] + inflow + jnp.sum(
+                valid & (scores > cfg.threshold), dtype=jnp.float32)
+            obs = dstate["win_obs"] + valid.sum(dtype=jnp.float32)
+            win = dstate["win"] + 1
+            done = win >= cfg.mtd_window
+            ratio = press / jnp.maximum(obs, 1.0)
+            step = ((ratio > cfg.mtd_up).astype(jnp.int32)
+                    - (ratio < cfg.mtd_down).astype(jnp.int32))
+            level = jnp.clip(dstate["level"] + jnp.where(done, step, 0),
+                             0, len(cfg.mtd_trims) - 1)
+            zero = jnp.zeros(())
+            out.update(
+                pressure=jnp.where(done, zero, press),
+                win_obs=jnp.where(done, zero, obs),
+                win=jnp.where(done, 0, win), level=level,
+            )
+        return out, out["status"] != 0
+
+    # ---- host-side reporting ------------------------------------------
+
+    def report(self, dstate):
+        """Scalar counters for ``load_stats`` (host side)."""
+        import numpy as np
+
+        status = np.asarray(dstate["status"])
+        return {
+            "def_quarantine_inflow": float(dstate["quarantined"]),
+            "def_readmitted": float(dstate["readmitted"]),
+            "def_quarantined_now": int((status == 1).sum()),
+            "def_probation_now": int((status == 2).sum()),
+            "def_mtd_level": int(dstate["level"]),
+        }
+
+    def arrays(self, dstate):
+        """Per-client reputation/status for ``RunResult.defense``."""
+        import numpy as np
+
+        return {
+            "reputation": np.asarray(dstate["rep"]),
+            "status": np.asarray(dstate["status"]),
+        }
+
+
+def make_defense(n: int, cfg: DefenseConfig) -> Defense:
+    return Defense(n, cfg)

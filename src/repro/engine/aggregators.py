@@ -69,6 +69,13 @@ class Aggregator:
     stat_names: tuple = ()
 
 
+def tree_where(cond, a, b):
+    """Leaf-wise ``jnp.where`` under one scalar predicate — select a
+    whole params/accumulator pytree without leaving jit (the defense
+    tier's moving-target rule swap and empty-cohort guards use this)."""
+    return jax.tree.map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
 def acc_stats(acc) -> dict:
     """The scalar telemetry dict a finished accumulator carries (empty
     for aggregators that declare no ``stat_names``). Stats live *inside*

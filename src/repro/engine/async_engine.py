@@ -101,6 +101,13 @@ class AsyncEngine:
         self.profile = _resolved_profile(cfg.profile)
         self.topo = cfg.resolved_topology()
         self.fault_set = cfg.resolved_faults()
+        self.defense_cfg = cfg.resolved_defense()
+        if self.defense_cfg is not None:
+            from repro.defense import make_defense
+
+            self.defense = make_defense(cfg.n_clients, self.defense_cfg)
+        else:
+            self.defense = None
         self._init_state, core = self._build_step()
         self._chunk = ChunkRunner(
             core, aux_keys=("loss", "clock", "version", "buffer_fill")
@@ -111,7 +118,7 @@ class AsyncEngine:
         inject the mesh-sharded pop and sharding constraints."""
         return _make_async_step(
             self.task, self.cfg, self.policy, self.aggregator, self.profile,
-            topo=self.topo, faults=self.fault_set,
+            topo=self.topo, faults=self.fault_set, defense=self.defense,
         )
 
     def init(self) -> Dict:
@@ -213,6 +220,18 @@ class AsyncEngine:
             load_stats["rd_expired"] = int(st["rd_expired"])
         for s in self.aggregator.stat_names:
             load_stats[f"agg_{s}"] = float(st[f"agg_{s}"])
+        if "defense" in state:
+            load_stats.update(self.defense.report(state["defense"]))
+            if "tier_acc" in state:
+                from repro.topo.reduce import tier_suspect_counts
+
+                load_stats["tier_suspects"] = tier_suspect_counts(
+                    self.topo, self.cfg.n_clients,
+                    state["defense"]["status"],
+                )
+        fault_exposure = None
+        if "faults" in state and self.cfg.fault_exposure:
+            fault_exposure = self.fault_set.exposure(state["faults"])
         return RunResult(
             config=self.cfg,
             records=records,
@@ -221,6 +240,9 @@ class AsyncEngine:
             wall_stats=wall_stats,
             params=state["params"],
             wall_time_s=wall_time_s,
+            fault_exposure=fault_exposure,
+            defense=(self.defense.arrays(state["defense"])
+                     if "defense" in state else None),
         )
 
 
@@ -229,6 +251,7 @@ def _make_async_step(
     profile: lat_mod.LatencyProfile,
     pop=None, cohort_layout=None, constrain_state=None,
     aggregate=None, cohort_pad: int = 0, topo=None, faults=None,
+    defense=None,
 ):
     """Builds ``(init_state, step core)`` with ``step(state, key) ->
     (state, aux)`` — the pure function the chunked scan body folds over
@@ -274,6 +297,17 @@ def _make_async_step(
     op exists and the engine is bit-for-bit today's
     (``tests/test_faults.py`` pins both the structural and the rate-0
     golden).
+
+    ``defense`` (a ``repro.defense.Defense``) closes the detect ->
+    quarantine -> adapt loop inside this same step under the same rule:
+    armed, it adds its ``(n,)`` reputation/status state to the carry,
+    draws its probation/readmit coins under dedicated fold 108, vetoes
+    quarantined clients at the selection seam (``send &= ~blocked``) and
+    suspect updates at the aggregation seam (``succ &= ~suspect`` — the
+    exact seam heartbeat dark-clients use), and, with mtd configured,
+    swaps the aggregate hook for the moving-target wrapper. Disarmed:
+    no state key, no fold, no op (``tests/test_defense.py`` pins the
+    structural golden and the armed-but-never-triggered bitwise one).
     """
     n = cfg.n_clients
     B = cfg.resolved_buffer_size()
@@ -282,6 +316,7 @@ def _make_async_step(
     tiered = topo is not None and not topo.is_star
     hb_timeout = float(topo.heartbeat_timeout) if topo is not None else 0.0
     have_faults = faults is not None
+    have_def = defense is not None
     rd_on = (cfg.redispatch_timeout or 0) > 0
     kill_on = have_faults and faults.has("kill")
     if have_faults and (faults.has("scale") or faults.has("noise")):
@@ -310,6 +345,14 @@ def _make_async_step(
             def aggregate(g, updates, bases, w, idx=None):
                 acc = agg.accumulate(agg.init(g), updates, bases, w)
                 return agg.finalize(g, acc), acc_stats(acc)
+    mtd_on = have_def and defense.mtd
+    if mtd_on:
+        # config rejects mtd under tiered/cohort-sharded aggregation, so
+        # the wrapped hook is always the inline (or bit-exact sharded)
+        # default; level 0 routes through it untouched via lax.cond
+        from repro.defense.adaptive import adaptive_aggregate
+
+        aggregate_mtd = adaptive_aggregate(aggregate, defense.cfg.mtd_trims)
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
@@ -337,6 +380,8 @@ def _make_async_step(
         if have_faults:
             # fold 7 off the init key: independent of the speed draw
             state["faults"] = faults.init(jax.random.fold_in(key, 7))
+        if have_def:
+            state["defense"] = defense.init()  # deterministic zeros
         if rd_on:
             state["rd"] = {
                 "t_disp": jnp.zeros((n,), jnp.float32),
@@ -359,6 +404,12 @@ def _make_async_step(
         available = ev["next_avail"] <= clock
         want, sched = policy.step(sched, k_sel)
         send = want & idle & available
+        if have_def:
+            # quarantined clients are vetoed at the admission seam (they
+            # still age); probation clients stay selectable so they keep
+            # generating evidence for re-admission
+            dstate = state["defense"]
+            send = send & ~defense.blocked(dstate)
         # only actual dispatches reset the AoI clock; everyone else ages
         sched = {**sched, "ages": age_update(prev_ages, send)}
         ep_sx, ep_sx2, ep_cnt = peak_age_accumulate(
@@ -518,11 +569,32 @@ def _make_async_step(
             arrived = valid & ~eff.kill if kill_on else valid
             hb = hb_mod.beat_at(hb, ev_mod.scatter_idx(idx, arrived), t_ev)
         staleness = jnp.maximum(version - disp_ver, 0)
+        if have_def:
+            # fold 108: the defense tier's dedicated key (sub-folds
+            # 0 probation / 1 readmit coins). Every update that arrived
+            # (pre-exclusion succ) is scored — including probation
+            # clients — then post-transition suspects are excluded from
+            # the reduction through the exact seam heartbeat dark
+            # clients use, closing the detect->quarantine loop within
+            # the step
+            dstate, suspect = defense.observe(
+                dstate, jax.random.fold_in(k_sel, 108),
+                updated, disp_params, idx, succ, staleness,
+            )
+            succ = succ & ~cohort_layout(suspect[idx])
         w = agg.weigh(succ, staleness)
         wsum = w.sum()
         has = wsum > 0
         denom = jnp.maximum(wsum, 1e-9)
-        params, agg_tel = aggregate(state["params"], updated, disp_params, w, idx)
+        if mtd_on:
+            params, agg_tel = aggregate_mtd(
+                state["params"], updated, disp_params, w, idx,
+                dstate["level"],
+            )
+        else:
+            params, agg_tel = aggregate(
+                state["params"], updated, disp_params, w, idx
+            )
         version = version + has.astype(jnp.int32)
         hist = jax.tree.map(
             lambda h, p: h.at[version % H].set(p), state["hist"], params
@@ -586,6 +658,8 @@ def _make_async_step(
             new_state["hb"] = hb
         if have_faults:
             new_state["faults"] = fstate
+        if have_def:
+            new_state["defense"] = dstate
         if rd_on:
             new_state["rd"] = rd
         if tiered:

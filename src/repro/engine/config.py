@@ -128,6 +128,19 @@ class RunConfig:
     # construction).
     shard_cohort: bool = False
 
+    # --- adaptive defense (repro.defense) ---
+    # False -> no defense state, no key folds, no ops: the engines are
+    # structurally bit-for-bit the calm run. True arms per-client
+    # reputation + quarantine (and, via defense_kwargs={"mtd": True},
+    # moving-target aggregation); the state rides the donated scan carry
+    # like fault state, so it works per-step, chunked, fleet-sharded,
+    # and cohort-sharded, and checkpoints/restores bitwise.
+    defense: bool = False
+    defense_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # surface per-client fault-exposure counts ((n,) per armed fault) in
+    # RunResult.fault_exposure — the detector benchmark's ground truth.
+    fault_exposure: bool = False
+
     def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
@@ -210,6 +223,36 @@ class RunConfig:
                 )
         elif self.fault_kwargs:
             raise ValueError("fault_kwargs given without faults")
+        if self.fault_exposure and not names:
+            raise ValueError(
+                "fault_exposure=True records per-client fault hits, but "
+                "no faults are configured — arm faults or drop the flag"
+            )
+        if self.defense:
+            # resolve eagerly (jax-free DefenseConfig) so a bad knob
+            # fails at config construction, like topology resolution
+            dcfg = self.resolved_defense()
+            if dcfg.mtd:
+                topo = self.resolved_topology()
+                if topo is not None and not topo.is_star:
+                    raise ValueError(
+                        "moving-target defense (mtd) swaps in an "
+                        "order-statistic trimmed mean, which is not "
+                        "additive: it cannot ride a tiered topology's "
+                        "segment-sum reduction — disable mtd or use the "
+                        "star topology (reputation/quarantine alone work "
+                        "everywhere)"
+                    )
+                if self.shard_cohort:
+                    raise ValueError(
+                        "moving-target defense (mtd) swaps in an "
+                        "order-statistic trimmed mean, which is not "
+                        "additive: it cannot be psum-merged under "
+                        "shard_cohort — disable mtd or shard_cohort "
+                        "(reputation/quarantine alone work everywhere)"
+                    )
+        elif self.defense_kwargs:
+            raise ValueError("defense_kwargs given without defense=True")
         if self.redispatch_timeout is not None:
             if self.mode != "async":
                 raise ValueError(
@@ -303,6 +346,17 @@ class RunConfig:
             for nm in names
         )
 
+    def resolved_defense(self):
+        """The ``repro.defense.DefenseConfig`` this run arms, or None.
+        The import is lazy but jax-free (``repro.defense.config`` is a
+        plain dataclass module), so eager validation in ``__post_init__``
+        keeps this module importable without jax."""
+        if not self.defense:
+            return None
+        from repro.defense.config import DefenseConfig
+
+        return DefenseConfig(**dict(self.defense_kwargs))
+
 
 def chunk_plan(rounds: int, eval_every: int, steps_per_chunk: int):
     """Split ``rounds`` steps into scan chunks of at most ``steps_per_chunk``
@@ -392,6 +446,10 @@ class RunResult:
     wall_stats: Optional[Dict[str, float]]  # async-only simulator stats
     params: Any
     wall_time_s: float
+    # per-fault (n,) exposure counts, only when cfg.fault_exposure
+    fault_exposure: Optional[Dict[str, np.ndarray]] = None
+    # per-client defense arrays ({"reputation", "status"}), only when armed
+    defense: Optional[Dict[str, np.ndarray]] = None
 
     def history(self) -> Dict[str, list]:
         """Legacy column-oriented history view of the records."""

@@ -22,7 +22,9 @@ its math:
 All three are delta aggregators (``finalize`` adds the robust mean delta
 to the global params); ``trimmed_mean``/``coordinate_median`` treat
 weights as validity only (order statistics are unweighted — documented
-trade-off), while ``norm_clip`` keeps fedbuff's staleness weighting.
+trade-off, counted per slot in the ``agg_unweighted`` stat and enforced
+by rejecting staleness kwargs), while ``norm_clip`` keeps fedbuff's
+staleness weighting.
 """
 from __future__ import annotations
 
@@ -113,6 +115,7 @@ def _order_stat_aggregator(name: str, reduce_sorted) -> Aggregator:
                 lambda p: jnp.zeros(p.shape, jnp.float32), g
             ),
             "count": jnp.zeros((), jnp.float32),
+            "stats": {"unweighted": jnp.zeros((), jnp.float32)},
         }
 
     def accumulate(acc, updates, bases, w):
@@ -132,6 +135,13 @@ def _order_stat_aggregator(name: str, reduce_sorted) -> Aggregator:
         return {
             "delta": jax.tree.map(jnp.add, acc["delta"], delta),
             "count": acc["count"] + c.astype(jnp.float32),
+            # every slot that entered an order-stat reduction did so with
+            # its staleness weight ignored — surfaced as agg_unweighted
+            # so runs that silently drop fedbuff discounting are visible
+            "stats": {
+                "unweighted": acc["stats"]["unweighted"]
+                + c.astype(jnp.float32)
+            },
         }
 
     def finalize(g, acc):
@@ -143,15 +153,29 @@ def _order_stat_aggregator(name: str, reduce_sorted) -> Aggregator:
         return jax.tree.map(fin, g, acc["delta"])
 
     return Aggregator(name, weigh, init, accumulate, finalize,
-                      additive=False)
+                      additive=False, stat_names=("unweighted",))
+
+
+def _reject_staleness(name: str, staleness_mode, staleness_exp) -> None:
+    """Order statistics are unweighted: accepting fedbuff staleness knobs
+    here and silently ignoring them has bitten before — refuse loudly."""
+    if staleness_mode is not None or staleness_exp is not None:
+        raise ValueError(
+            f"{name}: staleness_mode/staleness_exp are not supported — "
+            "order-statistic aggregators treat weights as validity only "
+            "and ignore staleness discounting (use norm_clip for a "
+            "robust aggregator that keeps staleness weighting)"
+        )
 
 
 @register_aggregator("trimmed_mean")
-def make_trimmed_mean(trim: float = 0.2) -> Aggregator:
+def make_trimmed_mean(trim: float = 0.2, staleness_mode=None,
+                      staleness_exp=None) -> Aggregator:
     """Coordinate-wise trimmed mean of the deltas: per coordinate, drop
     the ``floor(c * trim)`` lowest and highest values among the ``c``
     valid slots and average the middle — robust to ``trim`` of the
     cohort colluding arbitrarily."""
+    _reject_staleness("trimmed_mean", staleness_mode, staleness_exp)
     if not 0.0 <= trim < 0.5:
         raise ValueError(f"trimmed_mean: trim must be in [0, 0.5), got {trim}")
 
@@ -168,9 +192,11 @@ def make_trimmed_mean(trim: float = 0.2) -> Aggregator:
 
 
 @register_aggregator("coordinate_median")
-def make_coordinate_median() -> Aggregator:
+def make_coordinate_median(staleness_mode=None,
+                           staleness_exp=None) -> Aggregator:
     """Coordinate-wise median of the deltas — the trim -> 50% limit of
     ``trimmed_mean`` (even counts average the two middle values)."""
+    _reject_staleness("coordinate_median", staleness_mode, staleness_exp)
 
     def reduce_sorted(d_sorted, ranks, c):
         lo = jnp.maximum((c - 1) // 2, 0)

@@ -67,9 +67,11 @@ from repro.sim import events as ev_mod
 # are (n,)-leading too; their (E,) per-tier moments stay replicated via
 # the shape[0] == n check in fleet_state_sharding — same check that
 # keeps the fault sets' scalar "injected" counters replicated while
-# their (n,) prone masks and the re-dispatch deadline vectors shard)
+# their (n,) prone masks and the re-dispatch deadline vectors shard —
+# and the defense tier's scalar counters/mtd level replicated while its
+# (n,) reputation/status vectors shard)
 FLEET_STATE_KEYS = ("ev", "sched", "speed", "load_acc", "hb", "tier_acc",
-                    "faults", "rd")
+                    "faults", "rd", "defense")
 
 
 def per_device_state_bytes(state, dev) -> int:
@@ -270,6 +272,7 @@ class ShardedAsyncEngine(AsyncEngine):
                     cfg.resolved_buffer_size(), self.mesh_shards
                 ),
                 topo=self.topo, faults=self.fault_set,
+                defense=self.defense,
             )
 
         # bit-exact default: cohort-sized (B,) intermediates pinned to a
@@ -283,7 +286,7 @@ class ShardedAsyncEngine(AsyncEngine):
         return _make_async_step(
             self.task, cfg, self.policy, self.aggregator, self.profile,
             pop=pop, cohort_layout=replicate, constrain_state=constrain_state,
-            topo=self.topo, faults=self.fault_set,
+            topo=self.topo, faults=self.fault_set, defense=self.defense,
         )
 
     def init(self) -> Dict:

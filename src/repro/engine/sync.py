@@ -81,6 +81,13 @@ class SyncEngine:
                     "wall clock / version ring; sync rounds have neither — "
                     "drop them or use mode='async'"
                 )
+        self.defense_cfg = cfg.resolved_defense()
+        if self.defense_cfg is not None:
+            from repro.defense import make_defense
+
+            self.defense = make_defense(cfg.n_clients, self.defense_cfg)
+        else:
+            self.defense = None
         tiered = self.topo is not None and not self.topo.is_star
         self._assign = (
             jnp.asarray(self.topo.assign(cfg.n_clients)) if tiered else None
@@ -135,6 +142,7 @@ class SyncEngine:
                 aggregate=aggregate,
                 cohort_shards=shards,
                 faults=self.fault_set,
+                defense=self.defense,
             )
             self._sharded_eval = make_sharded_eval(
                 task, self.mesh, dist.FLEET_AXIS
@@ -149,19 +157,23 @@ class SyncEngine:
                     stacked_bases=False,
                 ),
                 faults=self.fault_set,
+                defense=self.defense,
             )
         else:
             core = _make_round_core(task, cfg, self.policy, self.aggregator,
-                                    faults=self.fault_set)
+                                    faults=self.fault_set,
+                                    defense=self.defense)
 
         assign = self._assign
         have_faults = self.fault_set is not None
+        have_def = self.defense is not None
         stat_names = self.aggregator.stat_names
 
         def scan_step(state, key):
-            params, sched, selected, loss, fstate, tel = core(
+            params, sched, selected, loss, fstate, dstate, tel = core(
                 state["params"], state["sched"], key,
                 state["faults"] if have_faults else None,
+                state["defense"] if have_def else None,
             )
             out = {"params": params, "sched": sched}
             if assign is not None:
@@ -170,6 +182,8 @@ class SyncEngine:
                 )
             if have_faults:
                 out["faults"] = fstate
+            if have_def:
+                out["defense"] = dstate
             if stat_names:
                 out["agg_stats"] = {
                     s: state["agg_stats"][s] + tel[s] for s in stat_names
@@ -200,6 +214,8 @@ class SyncEngine:
             state["faults"] = self.fault_set.init(
                 jax.random.fold_in(k_run, 2**31)
             )
+        if self.defense is not None:
+            state["defense"] = self.defense.init()  # deterministic zeros
         if self.aggregator.stat_names:
             state["agg_stats"] = {
                 s: jnp.zeros((), jnp.float32)
@@ -253,6 +269,18 @@ class SyncEngine:
         if "agg_stats" in state:
             for s in self.aggregator.stat_names:
                 load_stats[f"agg_{s}"] = float(state["agg_stats"][s])
+        if "defense" in state:
+            load_stats.update(self.defense.report(state["defense"]))
+            if "tier_acc" in state:
+                from repro.topo.reduce import tier_suspect_counts
+
+                load_stats["tier_suspects"] = tier_suspect_counts(
+                    self.topo, self.cfg.n_clients,
+                    state["defense"]["status"],
+                )
+        fault_exposure = None
+        if "faults" in state and self.cfg.fault_exposure:
+            fault_exposure = self.fault_set.exposure(state["faults"])
         return RunResult(
             config=self.cfg,
             records=records,
@@ -261,12 +289,15 @@ class SyncEngine:
             wall_stats=None,
             params=state["params"],
             wall_time_s=wall_time_s,
+            fault_exposure=fault_exposure,
+            defense=(self.defense.arrays(state["defense"])
+                     if "defense" in state else None),
         )
 
 
 def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator,
                      cohort_layout=None, aggregate=None, cohort_shards: int = 1,
-                     faults=None):
+                     faults=None, defense=None):
     """The pure per-round function (no jit): shared by the legacy per-step
     path and the scan body of the chunked hot loop.
 
@@ -282,7 +313,14 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
     state through the round: fault keys fold off ``k_sel`` at 105 (the
     same schedule as the async engine — sub-fold 1 for ``on_pop``, 2 for
     update corruption), so with no faults armed no extra key material is
-    drawn and the round is bit-for-bit the faultless one."""
+    drawn and the round is bit-for-bit the faultless one.
+
+    ``defense`` (a ``repro.defense.Defense``) mirrors the async seams on
+    the same fold schedule (108 off ``k_sel``): quarantined clients are
+    masked out of ``selected`` right after the policy step (they still
+    age — the policy's chain advanced; the defense vetoes the dispatch),
+    every surviving slot is scored with staleness identically zero, and
+    post-transition suspects lose their aggregation weight."""
     from repro.core.distributed import cohort_padding
 
     width = cfg.cohort_width() if not policy.exact_k else cfg.k
@@ -297,6 +335,12 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
             acc = agg.accumulate(agg.init(g), updates, bases, w)
             return agg.finalize(g, acc), acc_stats(acc)
     have_faults = faults is not None
+    have_def = defense is not None
+    mtd_on = have_def and defense.mtd
+    if mtd_on:
+        from repro.defense.adaptive import adaptive_aggregate
+
+        aggregate_mtd = adaptive_aggregate(aggregate, defense.cfg.mtd_trims)
     kill_on = have_faults and faults.has("kill")
     corrupt_on = have_faults and (faults.has("scale") or faults.has("noise"))
     if corrupt_on:
@@ -306,9 +350,11 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
     )
     lr_fn = exponential_decay(cfg.lr0, cfg.lr_decay)
 
-    def round_fn(params, sched_state, key, fstate=None):
+    def round_fn(params, sched_state, key, fstate=None, dstate=None):
         k_sel, k_local = jax.random.split(key)
         selected, sched_state = policy.step(sched_state, k_sel)
+        if have_def:
+            selected = selected & ~defense.blocked(dstate)
         idx, mask = cohort_indices(selected, width)
         keys = jax.random.split(k_local, width)
         if cohort_pad:
@@ -344,16 +390,29 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
         if kill_on:
             # a dropped client's update never reaches the server: weight 0
             valid = valid & ~eff.kill
+        if have_def:
+            # fold 108 (same schedule as the async engine); staleness is
+            # identically zero in a sync round
+            dstate, suspect = defense.observe(
+                dstate, jax.random.fold_in(k_sel, 108),
+                updated, params, idx, valid, jnp.zeros_like(idx),
+            )
+            valid = valid & ~cohort_layout(suspect[idx])
         # sync cohorts are never stale: staleness is identically zero
         w = agg.weigh(valid, jnp.zeros_like(idx))
-        params, tel = aggregate(params, updated, params, w, idx)
+        if mtd_on:
+            params, tel = aggregate_mtd(
+                params, updated, params, w, idx, dstate["level"]
+            )
+        else:
+            params, tel = aggregate(params, updated, params, w, idx)
         wsum = w.sum()
         # NaN, not a fake near-0 datapoint, when nobody was selected
         # (matching the async engine's empty-buffer convention)
         mean_loss = jnp.where(
             wsum > 0, jnp.sum(losses * w) / jnp.maximum(wsum, 1.0), jnp.nan
         )
-        return params, sched_state, selected, mean_loss, fstate, tel
+        return params, sched_state, selected, mean_loss, fstate, dstate, tel
 
     return round_fn
 
@@ -364,7 +423,7 @@ def _make_round_fn(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregator
     core = _make_round_core(task, cfg, policy, agg)
 
     def round_fn(params, sched_state, key):
-        params, sched_state, selected, loss, _, _ = core(
+        params, sched_state, selected, loss, _, _, _ = core(
             params, sched_state, key
         )
         return params, sched_state, selected, loss

@@ -170,6 +170,21 @@ class FaultSet:
             f.name: float(fstate[f.name]["injected"]) for f in self.faults
         }
 
+    def exposure(self, fstate) -> Dict[str, "np.ndarray"]:
+        """Per-client hit tallies, one ``(n,)`` float array per fault.
+
+        Host-side copy of the ``exposed`` counters — the ground-truth
+        "which clients were actually attacked" labels that the defense
+        benchmarks score detection precision/recall against. Surfaced on
+        :class:`~repro.engine.config.RunResult` only when
+        ``RunConfig.fault_exposure`` is set."""
+        import numpy as np
+
+        return {
+            f.name: np.asarray(fstate[f.name]["exposed"])
+            for f in self.faults
+        }
+
 
 def corrupt_updates(updated, bases, eff: Effects, key,
                     has_scale: bool, has_noise: bool):
@@ -224,7 +239,13 @@ def _prone_init(n: int, client_frac: float):
             prone = jnp.ones((n,), jnp.bool_)
         else:
             prone = jax.random.bernoulli(key, client_frac, (n,))
-        return {"prone": prone, "injected": jnp.zeros((), jnp.float32)}
+        return {
+            "prone": prone,
+            "injected": jnp.zeros((), jnp.float32),
+            # per-client hit tally — ground truth for detection P/R
+            # benchmarks and the opt-in RunResult.fault_exposure surface
+            "exposed": jnp.zeros((n,), jnp.float32),
+        }
 
     return init
 
@@ -242,8 +263,22 @@ def _cohort_hit(fst, key, idx, valid, rate):
     return hit
 
 
-def _count(fst, hit):
-    return {**fst, "injected": fst["injected"] + hit.sum(dtype=jnp.float32)}
+def _count(fst, hit, idx=None):
+    """Bump the scalar injection counter and the per-client exposure
+    tally. ``idx`` given means ``hit`` is cohort-shaped — scatter-add at
+    the cohort's client indices (``mode="drop"`` so padded slots, which
+    are never hit anyway, cannot write out of bounds); ``idx=None`` means
+    ``hit`` is already fleet-shaped (dispatch-side faults)."""
+    h = hit.astype(jnp.float32)
+    if idx is None:
+        exposed = fst["exposed"] + h
+    else:
+        exposed = fst["exposed"].at[idx].add(h, mode="drop")
+    return {
+        **fst,
+        "injected": fst["injected"] + h.sum(),
+        "exposed": exposed,
+    }
 
 
 @register_fault("dropout")
@@ -255,7 +290,7 @@ def make_dropout(n: int, rate: float, client_frac: float = 1.0) -> Fault:
     def on_pop(fst, key, idx, valid):
         hit = _cohort_hit(fst, key, idx, valid, rate)
         eff = identity_effects(idx.shape)._replace(kill=hit)
-        return _count(fst, hit), eff
+        return _count(fst, hit, idx), eff
 
     return Fault("dropout", channels=("kill",), rate=rate,
                  init=_prone_init(n, client_frac), on_pop=on_pop)
@@ -301,7 +336,7 @@ def make_stale_replay(n: int, rate: float, shift: int = MAX_REPLAY,
         eff = identity_effects(idx.shape)._replace(
             replay_shift=jnp.where(hit, jnp.int32(shift), 0)
         )
-        return _count(fst, hit), eff
+        return _count(fst, hit, idx), eff
 
     return Fault("stale_replay", channels=("replay",), rate=rate,
                  async_only=True, init=_prone_init(n, client_frac),
@@ -322,7 +357,7 @@ def make_corrupt(n: int, rate: float, sigma: float = 1.0,
         eff = identity_effects(idx.shape)._replace(
             noise_sigma=jnp.where(hit, jnp.float32(sigma), 0.0)
         )
-        return _count(fst, hit), eff
+        return _count(fst, hit, idx), eff
 
     return Fault("corrupt", channels=("noise",), rate=rate,
                  init=_prone_init(n, client_frac), on_pop=on_pop)
@@ -339,7 +374,7 @@ def make_sign_flip(n: int, rate: float, client_frac: float = 1.0) -> Fault:
         eff = identity_effects(idx.shape)._replace(
             delta_scale=jnp.where(hit, -1.0, 1.0)
         )
-        return _count(fst, hit), eff
+        return _count(fst, hit, idx), eff
 
     return Fault("sign_flip", channels=("scale",), rate=rate,
                  init=_prone_init(n, client_frac), on_pop=on_pop)
@@ -359,7 +394,7 @@ def make_scale_attack(n: int, rate: float, factor: float = 10.0,
         eff = identity_effects(idx.shape)._replace(
             delta_scale=jnp.where(hit, jnp.float32(factor), 1.0)
         )
-        return _count(fst, hit), eff
+        return _count(fst, hit, idx), eff
 
     return Fault("scale_attack", channels=("scale",), rate=rate,
                  init=_prone_init(n, client_frac), on_pop=on_pop)

@@ -106,6 +106,24 @@ def add_common_args(ap: argparse.ArgumentParser, defaults: Dict[str, Any]) -> No
     ap.add_argument("--redispatch-retries", type=int, default=1,
                     help="re-dispatch attempts per dispatch before the "
                          "slot is abandoned (default 1)")
+    # --- adaptive defense tier (repro.defense) ---
+    ap.add_argument("--defense", action="store_true",
+                    help="arm the adaptive defense tier: per-client EWMA "
+                         "reputation scoring, quarantine with a probation "
+                         "Markov chain, and exclusion of flagged clients "
+                         "from selection and aggregation. Omitting the "
+                         "flag is bit-for-bit identical to a defense-free "
+                         "run.")
+    ap.add_argument("--quarantine-threshold", type=float, default=None,
+                    metavar="T",
+                    help="reputation score above which a client is "
+                         "quarantined (default 0.55; 'inf' arms the "
+                         "scoring pipeline without ever quarantining)")
+    ap.add_argument("--mtd-window", type=int, default=None, metavar="STEPS",
+                    help="arm moving-target aggregation: re-decide the "
+                         "trimmed-mean trim fraction from windowed attack "
+                         "pressure every STEPS aggregations (needs "
+                         "--defense; star topology only)")
 
 
 def build_task(args: argparse.Namespace) -> FLTask:
@@ -182,9 +200,28 @@ def fault_args(args: argparse.Namespace) -> Dict[str, Any]:
     return kw
 
 
+def defense_args(args: argparse.Namespace) -> Dict[str, Any]:
+    """``defense``/``defense_kwargs`` RunConfig fields from the shared
+    ``--defense``/``--quarantine-threshold``/``--mtd-window`` flags."""
+    if not args.defense:
+        if args.quarantine_threshold is not None or args.mtd_window is not None:
+            raise SystemExit(
+                "--quarantine-threshold/--mtd-window need --defense"
+            )
+        return {}
+    kw: Dict[str, Any] = {}
+    if args.quarantine_threshold is not None:
+        kw["threshold"] = args.quarantine_threshold
+    if args.mtd_window is not None:
+        kw["mtd"] = True
+        kw["mtd_window"] = args.mtd_window
+    return {"defense": True, "defense_kwargs": kw}
+
+
 def build_run_config(args: argparse.Namespace, mode: str, eval_div: int,
                      **extra) -> RunConfig:
-    extra = {**topology_args(args), **fault_args(args), **extra}
+    extra = {**topology_args(args), **fault_args(args), **defense_args(args),
+             **extra}
     return RunConfig(
         mode=mode,
         n_clients=args.clients, k=args.k, m=args.m, policy=args.policy,
@@ -199,6 +236,25 @@ def build_run_config(args: argparse.Namespace, mode: str, eval_div: int,
         shard_cohort=args.shard_cohort,
         **extra,
     )
+
+
+def print_defense_stats(load_stats: Optional[Dict[str, Any]]) -> None:
+    """Defense-tier report (present when ``--defense`` ran): quarantine
+    flow, current suspect census, and the moving-target trim level."""
+    ls = load_stats or {}
+    if "def_quarantined_now" not in ls:
+        return
+    line = (f"defense: quarantined={int(ls['def_quarantined_now'])} "
+            f"probation={int(ls['def_probation_now'])} "
+            f"(inflow {int(ls['def_quarantine_inflow'])}, "
+            f"readmitted {int(ls['def_readmitted'])})")
+    if "def_mtd_level" in ls:
+        line += f" mtd_level={int(ls['def_mtd_level'])}"
+    print(line)
+    if "tier_suspects" in ls:
+        counts = ls["tier_suspects"]
+        print("  suspects by tier-0 node: "
+              + ", ".join(f"{i}:{int(c)}" for i, c in enumerate(counts)))
 
 
 def print_tier_stats(load_stats: Optional[Dict[str, Any]]) -> None:

@@ -35,6 +35,7 @@ from repro.launch._fl_cli import (
     add_common_args,
     build_run_config,
     build_task,
+    print_defense_stats,
     print_tier_stats,
     write_result,
 )
@@ -123,6 +124,7 @@ def main() -> None:
         print(f"X_round: E[X]={es['mean_X']:.3f} Var[X]={es['var_X']:.3f} "
               f"(samples {es['num_samples']}, "
               f"{'history' if res.selection is not None else 'accumulators'})")
+    print_defense_stats(res.load_stats)
     print_tier_stats(res.load_stats)
     if res.records:
         last = res.records[-1]

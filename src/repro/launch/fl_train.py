@@ -27,6 +27,7 @@ from repro.launch._fl_cli import (
     add_common_args,
     build_run_config,
     build_task,
+    print_defense_stats,
     print_tier_stats,
     write_result,
 )
@@ -70,6 +71,7 @@ def main() -> None:
     if agg_stats:
         print("robust aggregation: " + ", ".join(
             f"{nm}={int(v)}" for nm, v in agg_stats.items()))
+    print_defense_stats(res.load_stats)
     print_tier_stats(res.load_stats)
     if args.target_acc:
         r = rounds_to_target(res.history(), args.target_acc)

@@ -32,6 +32,7 @@ from repro.serve.loop import (  # noqa: F401
 from repro.serve.router import (  # noqa: F401
     Router,
     make_router,
+    penalized_load,
     register_router,
     router_names,
 )
@@ -42,6 +43,7 @@ __all__ = [
     "VersionRead",
     "Router",
     "make_router",
+    "penalized_load",
     "register_router",
     "router_names",
     "ReplicaPool",

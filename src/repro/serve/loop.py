@@ -44,7 +44,7 @@ from repro.serve.batching import (
     slot_decode_fn,
     write_slot,
 )
-from repro.serve.router import Router, make_router
+from repro.serve.router import Router, make_router, penalized_load
 from repro.serve.store import VersionStore
 
 
@@ -170,6 +170,22 @@ class ReplicaPool:
         orphans = [s for s in self.active[replica] if s is not None]
         self.active[replica] = [None] * self.slots
         return orphans
+
+    def revive(self, replica: int, store: VersionStore) -> None:
+        """Restart a crashed replica: mark it alive with an empty slot
+        pool and re-pin it against the current ring snapshot. In-flight
+        state never survives the crash (the orphans already failed over
+        at crash time), so a revived replica comes back cold and simply
+        rejoins the router's candidate set."""
+        if self.alive[replica]:
+            return
+        self.alive[replica] = True
+        self.active[replica] = [None] * self.slots
+        read = store.read(store.latest - replica * self.stagger)
+        self.ring_miss += int(read.ring_miss)
+        self.params[replica] = read.params
+        self.version[replica] = int(read.read_ver)
+        self.staleness[replica] = int(read.staleness)
 
     def join(self, replica: int, req: Request, tick: int):
         """Admit ``req`` on ``replica``: prefill its prompt into a fresh
@@ -303,6 +319,8 @@ def run_serve_loop(
     seed: int = 0,
     pool: Optional[ReplicaPool] = None,
     faults=None,
+    restart_ticks: int = 0,
+    reputation_penalty: float = 0.0,
 ) -> ServeReport:
     """Drive the continuous-batching loop over an open-loop request trace.
 
@@ -322,7 +340,24 @@ def run_serve_loop(
     and re-queues its in-flight streams at the queue head as failover
     resumes — zero streams are dropped, counted in
     ``serve_stats["failed_over"]``.
+
+    ``restart_ticks > 0`` arms graceful restarts: a crashed replica
+    revives cold (``ReplicaPool.revive``) after that many ticks down,
+    counted in ``serve_stats["revived"]``. ``reputation_penalty > 0``
+    arms crash reputation: each replica carries a crash count decayed
+    0.98x per tick, and ``penalty x count`` is added onto its routing
+    load (``router.penalized_load``) so load-aware routers steer new
+    joins away from recently flaky replicas. Both default off and add
+    zero ops — the calm loop is bitwise unchanged.
     """
+    if restart_ticks < 0:
+        raise ValueError(
+            f"restart_ticks must be >= 0, got {restart_ticks}"
+        )
+    if reputation_penalty < 0:
+        raise ValueError(
+            f"reputation_penalty must be >= 0, got {reputation_penalty}"
+        )
     crash_rate = 0.0
     for f in tuple(faults) if faults is not None else ():
         if getattr(f, "scope", None) != "serve":
@@ -362,10 +397,22 @@ def run_serve_loop(
     pending = collections.deque(requests)
     results: List[StreamResult] = []
     decisions = rejections = 0
-    crashes = failed_over = 0
+    crashes = failed_over = revived = 0
+    crash_penalty = np.zeros((pool.n_replicas,), np.float32)
+    down_since: Dict[int, int] = {}
     decode_wall = 0.0
     t = 0
     for t in range(ticks):
+        # --- restarts: crashed replicas come back cold after their
+        # restart window, before this tick's crash draw can re-kill them
+        if restart_ticks > 0:
+            for i, since in list(down_since.items()):
+                if t - since >= restart_ticks:
+                    pool.revive(i, store)
+                    revived += 1
+                    del down_since[i]
+        if reputation_penalty > 0.0:
+            crash_penalty *= np.float32(0.98)
         # --- fault injection: replica crashes, sparing the last survivor
         if crash_rate > 0.0 and pool.n_alive() > 1:
             hit = np.asarray(jax.random.bernoulli(
@@ -377,6 +424,8 @@ def run_serve_loop(
                     continue
                 orphans = pool.crash(i)
                 crashes += 1
+                crash_penalty[i] += 1.0
+                down_since[i] = t
                 failed_over += len(orphans)
                 # failover resumes go to the queue head, oldest first
                 queue.extendleft(
@@ -387,8 +436,13 @@ def run_serve_loop(
         # --- admission: one router decision per queued head request
         while queue and pool.total_free() > 0:
             req = queue[0]
+            load = jnp.asarray(pool.load())
+            if reputation_penalty > 0.0:
+                load = penalized_load(
+                    load, np.float32(reputation_penalty) * crash_penalty
+                )
             ridx, rstate = rt.step(
-                rstate, jnp.asarray(pool.load()),
+                rstate, load,
                 jax.random.fold_in(k_dec, decisions),
             )
             decisions += 1
@@ -421,6 +475,7 @@ def run_serve_loop(
     serve_stats["ring_miss"] = pool.ring_miss
     serve_stats["crashes"] = crashes
     serve_stats["failed_over"] = failed_over
+    serve_stats["revived"] = revived
     return ServeReport(
         results=results,
         ticks=t + 1,

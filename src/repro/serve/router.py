@@ -87,6 +87,17 @@ def router_names() -> Tuple[str, ...]:
     return tuple(sorted(_ROUTERS))
 
 
+def penalized_load(load, penalty):
+    """Reputation-adjusted load vector: add a per-replica penalty (e.g.
+    the serving loop's decayed crash count x weight) onto the finite
+    entries so flaky-but-alive replicas lose routing ties, while the
+    pool's +inf dead markers pass through untouched — every load-aware
+    router keeps routing around the dead."""
+    load = jnp.asarray(load, jnp.float32)
+    pen = jnp.asarray(penalty, jnp.float32)
+    return jnp.where(jnp.isfinite(load), load + pen, load)
+
+
 # ---------------------------------------------------------------------------
 # Built-ins
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.engine.aggregators import Aggregator, acc_stats
 from repro.sim import latency as lat_mod
@@ -160,6 +161,24 @@ def tiered_apply(
         return agg.finalize(g, acc), acc_stats(acc)
 
     return apply
+
+
+def tier_suspect_counts(topo: Topology, n_clients: int, status) -> list:
+    """Host-side per-edge-node suspect census for run telemetry.
+
+    Buckets the defense tier's final per-client status (non-zero =
+    quarantined or on probation) by the topology's tier-0 assignment, so
+    operators can see *where* in the aggregation DAG the flagged clients
+    sit. Star topologies have one implicit edge node — the whole fleet
+    buckets into it."""
+    suspect = (np.asarray(status) != 0).astype(np.float64)
+    if topo.is_star:
+        return [float(suspect.sum())]
+    assign = np.asarray(topo.assign(n_clients))
+    counts = np.bincount(
+        assign, weights=suspect, minlength=int(topo.tier_sizes[0])
+    )
+    return [float(c) for c in counts]
 
 
 def make_hop_latency(topo: Topology, n_clients: int):

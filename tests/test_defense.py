@@ -1,0 +1,463 @@
+"""Adaptive defense tier: reputation scoring, quarantine/probation, and
+moving-target aggregation (``repro.defense``).
+
+The contract under test mirrors ``tests/test_faults.py``:
+
+  * defense off is *structurally* bit-for-bit (no state keys, no key
+    folds, no ops);
+  * armed-but-never-triggered (``threshold=inf``) is bitwise the calm
+    run too — every armed effect goes through per-slot ``where`` /
+    ``& ~mask`` seams;
+  * armed-and-firing agrees bitwise between per-step and chunked
+    execution, between the single-device and fleet-sharded async
+    engines, and across a checkpoint crash-restart;
+  * quarantine actually catches injected attackers and bars them from
+    selection, and the mtd ladder escalates under sustained pressure.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import MNIST_CNN
+from repro.data.synthetic import make_image_dataset
+from repro.engine import (
+    AsyncEngine,
+    RunConfig,
+    ShardedAsyncEngine,
+    make_engine,
+    run_engine,
+)
+from repro.engine.registry import make_aggregator
+
+SMALL_CNN = dataclasses.replace(
+    MNIST_CNN, name="paper-cnn-mnist-defense", image_size=8,
+    conv_channels=(4, 8), fc_width=32,
+)
+
+N = 16
+
+# one mixed attacker cohort shared by the armed-and-firing tests:
+# a quarter of the fleet submits -3x (sign-flipped, boosted) deltas
+ATTACK = dict(
+    faults=("scale_attack",), fault_rate=1.0,
+    fault_kwargs={"scale_attack": {"factor": -3.0, "client_frac": 0.25}},
+)
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        "mnist-defense", 10, 8, 1, 120, 60, seed=0, difficulty=0.8
+    )
+    return make_cnn_task(SMALL_CNN, train, test, n_clients=N)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_clients=N, k=4, m=4, policy="markov", rounds=4, local_epochs=1,
+        batch_size=5, eval_every=2, mode="async", buffer_size=3,
+        profile="mobile",
+    )
+    base.update(kw)
+    return RunConfig(**base)
+
+
+def _raw(leaf):
+    if hasattr(leaf, "dtype") and jax.dtypes.issubdtype(
+        leaf.dtype, jax.dtypes.prng_key
+    ):
+        return np.asarray(jax.random.key_data(leaf))
+    return np.asarray(leaf)
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(_raw(la), _raw(lb))
+
+
+# ---------------------------------------------------------------------------
+# (1) config validation
+# ---------------------------------------------------------------------------
+
+
+def test_defense_config_validates_knobs():
+    from repro.defense import DefenseConfig
+
+    DefenseConfig()  # defaults are valid
+    with pytest.raises(ValueError, match="threshold"):
+        DefenseConfig(threshold=0.0)
+    with pytest.raises(ValueError, match="ewma"):
+        DefenseConfig(ewma=0.0)
+    with pytest.raises(ValueError, match="q_decay"):
+        DefenseConfig(q_decay=1.5)
+    with pytest.raises(ValueError, match="p_probation"):
+        DefenseConfig(p_probation=-0.1)
+    with pytest.raises(ValueError, match="mtd_trims"):
+        DefenseConfig(mtd_trims=(0.0, 0.6))
+    with pytest.raises(ValueError, match="mtd_window"):
+        DefenseConfig(mtd_window=0)
+    with pytest.raises(ValueError, match="mtd_down"):
+        DefenseConfig(mtd_up=0.05, mtd_down=0.1)
+
+
+def test_run_config_gates_defense_flags():
+    with pytest.raises(ValueError, match="defense_kwargs"):
+        _cfg(defense_kwargs={"threshold": 0.5})
+    with pytest.raises(ValueError, match="threshold"):
+        _cfg(defense=True, defense_kwargs={"threshold": -1.0})
+    # moving-target trim swaps are order statistics: not additive, so
+    # they cannot ride a tiered reduction or the cohort-sharded psum
+    with pytest.raises(ValueError, match="tiered topology"):
+        _cfg(defense=True, defense_kwargs={"mtd": True},
+             topology="hierarchical", topology_kwargs={"tiers": (4,)})
+    with pytest.raises(ValueError, match="shard_cohort"):
+        _cfg(mode="sync", buffer_size=None, profile="lognormal",
+             defense=True, defense_kwargs={"mtd": True},
+             mesh_shards=0, shard_cohort=True)
+    with pytest.raises(ValueError, match="fault_exposure"):
+        _cfg(fault_exposure=True)
+    assert _cfg(defense=True).resolved_defense().threshold == 0.55
+    assert _cfg().resolved_defense() is None
+
+
+# ---------------------------------------------------------------------------
+# (2) structural gating + armed-never-triggered bitwise golden
+# ---------------------------------------------------------------------------
+
+
+def test_defense_off_adds_no_state(small_task):
+    state = AsyncEngine(small_task, _cfg()).init()
+    assert "defense" not in state
+    armed = AsyncEngine(small_task, _cfg(defense=True)).init()
+    assert "defense" in armed
+    assert set(armed["defense"]) == {
+        "rep", "status", "quarantined", "readmitted",
+        "pressure", "win_obs", "win", "level",
+    }
+
+
+@pytest.mark.parametrize("mode", ["async", "sync", "sharded"])
+def test_threshold_inf_defense_is_bitwise_identity(small_task, mode):
+    """Arming the full scoring pipeline with an unreachable quarantine
+    threshold must not move a single bit: scores are computed but every
+    exclusion is ``x & ~False`` and the mtd ladder stays at level 0
+    (bitwise the base aggregator). Per-step and chunked."""
+    if mode == "sync":
+        kw = dict(mode="sync", buffer_size=None, profile="lognormal")
+    else:
+        kw = dict(mesh_shards=0) if mode == "sharded" else {}
+    base = make_engine(small_task, _cfg(**kw))
+    armed = make_engine(small_task, _cfg(
+        defense=True,
+        defense_kwargs={"threshold": float("inf"), "mtd": True,
+                        "mtd_window": 2},
+        **kw,
+    ))
+    sb = base.init()
+    sa = armed.init()
+    for r in range(4):
+        sb, auxb = base.step(sb, r)
+        sa, auxa = armed.step(sa, r)
+        np.testing.assert_array_equal(np.asarray(auxb["send"]),
+                                      np.asarray(auxa["send"]))
+        np.testing.assert_array_equal(np.asarray(auxb["loss"]),
+                                      np.asarray(auxa["loss"]))
+    _assert_trees_equal(base.eval_params(sb), armed.eval_params(sa))
+    sc = armed.init()
+    sc, _ = armed.run_chunk(sc, 0, 4, False)
+    _assert_trees_equal(armed.eval_params(sa), armed.eval_params(sc))
+
+
+# ---------------------------------------------------------------------------
+# (3) armed-and-firing parity: chunked, sharded, crash-restart
+# ---------------------------------------------------------------------------
+
+ARMED = dict(
+    defense=True,
+    defense_kwargs={"threshold": 0.3, "mtd": True, "mtd_window": 2,
+                    "mtd_up": 0.05, "mtd_down": 0.01},
+    **ATTACK,
+)
+
+
+def test_armed_chunked_matches_per_step(small_task):
+    eng = make_engine(small_task, _cfg(rounds=8, **ARMED))
+    sa = eng.init()
+    for r in range(8):
+        sa, _ = eng.step(sa, r)
+    sc, _ = eng.run_chunk(eng.init(), 0, 8, False)
+    _assert_trees_equal(eng.eval_params(sa), eng.eval_params(sc))
+    _assert_trees_equal(sa["defense"], sc["defense"])
+
+
+def test_armed_sharded_matches_single(small_task):
+    cfg = lambda **kw: _cfg(rounds=8, **ARMED, **kw)  # noqa: E731
+    single = AsyncEngine(small_task, cfg())
+    sharded = ShardedAsyncEngine(small_task, cfg(mesh_shards=0))
+    s1, _ = single.run_chunk(single.init(), 0, 8, False)
+    s2, _ = sharded.run_chunk(sharded.init(), 0, 8, False)
+    _assert_trees_equal(single.eval_params(s1), sharded.eval_params(s2))
+    _assert_trees_equal(s1["defense"], s2["defense"])
+    assert int(np.asarray(s1["defense"]["quarantined"])) > 0
+
+
+def test_crash_restart_resumes_bitwise_with_defense(small_task, tmp_path):
+    """Kill an armed run mid-flight and restart from the checkpointed
+    carry: the continuation (reputation EWMAs, quarantine statuses, mtd
+    window counters included) must be bit-for-bit the uninterrupted
+    run."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    engine = AsyncEngine(small_task, _cfg(rounds=6, rng_impl="rbg", **ARMED))
+    full, _ = engine.run_chunk(engine.init(), 0, 6, False)
+
+    half, _ = engine.run_chunk(engine.init(), 0, 3, False)
+    save_checkpoint(str(tmp_path / "crash"), half, step=3)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), half
+    )
+    restored, step = load_checkpoint(str(tmp_path / "crash"), like)
+    assert step == 3
+    resumed, _ = engine.run_chunk(restored, 3, 3, False)
+    _assert_trees_equal(full, resumed)
+
+
+# ---------------------------------------------------------------------------
+# (4) detection + quarantine semantics
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_catches_attackers_and_bars_selection(small_task):
+    """The closed loop: injected attackers accumulate reputation, get
+    quarantined, and stop being selected — honest clients stay clean."""
+    res = run_engine(make_engine(small_task, _cfg(
+        rounds=12, fault_exposure=True, defense=True,
+        defense_kwargs={"threshold": 0.55, "ewma": 0.5}, **ATTACK,
+    )))
+    exposed = res.fault_exposure["scale_attack"]
+    suspect = res.defense["status"] != 0
+    assert exposed.sum() > 0
+    # most attacked clients are flagged, and no honest client is
+    assert (suspect & (exposed > 0)).sum() >= 2
+    assert not (suspect & (exposed == 0)).any()
+    assert res.load_stats["def_quarantine_inflow"] > 0
+    # reputations separate: flagged clients score above the clean ones
+    rep = res.defense["reputation"]
+    assert rep[suspect].min() > rep[~suspect].max()
+
+
+def test_mtd_escalates_under_pressure(small_task):
+    calm = run_engine(make_engine(small_task, _cfg(
+        rounds=12, defense=True,
+        defense_kwargs={"threshold": 0.55, "ewma": 0.5, "mtd": True,
+                        "mtd_window": 2, "mtd_up": 0.45, "mtd_down": 0.01},
+    )))
+    hot = run_engine(make_engine(small_task, _cfg(
+        rounds=12, defense=True,
+        defense_kwargs={"threshold": 0.55, "ewma": 0.5, "mtd": True,
+                        "mtd_window": 2, "mtd_up": 0.45, "mtd_down": 0.01},
+        **ATTACK,
+    )))
+    assert calm.load_stats["def_mtd_level"] == 0
+    assert hot.load_stats["def_mtd_level"] > 0
+
+
+RAGGED_NS = [8, 12, 16]
+
+
+def _check_quarantine_parity(n):
+    """Property: fleet-sharded and single-device engines agree bitwise
+    on the final reputation vector and quarantine mask, whatever the
+    fleet size (padding slots must never generate evidence)."""
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        f"mnist-defense-q{n}", 10, 8, 1, 120, 60, seed=0, difficulty=0.8
+    )
+    task = make_cnn_task(SMALL_CNN, train, test, n_clients=n)
+    cfg = lambda **kw: _cfg(  # noqa: E731
+        n_clients=n, rounds=6, defense=True,
+        defense_kwargs={"threshold": 0.3}, **ATTACK, **kw,
+    )
+    single = AsyncEngine(task, cfg())
+    sharded = ShardedAsyncEngine(task, cfg(mesh_shards=0))
+    s1, _ = single.run_chunk(single.init(), 0, 6, False)
+    s2, _ = sharded.run_chunk(sharded.init(), 0, 6, False)
+    _assert_trees_equal(s1["defense"], s2["defense"])
+    _assert_trees_equal(single.eval_params(s1), sharded.eval_params(s2))
+
+
+def test_quarantine_mask_sharded_matches_single():
+    """Property-based when hypothesis is available; otherwise sweep the
+    same ragged fleet sizes directly (the container may not ship
+    hypothesis and installing it is off the table)."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        for n in RAGGED_NS[:2]:
+            _check_quarantine_parity(n)
+        return
+
+    @settings(max_examples=3, deadline=None)
+    @given(n=st.sampled_from(RAGGED_NS))
+    def check(n):
+        _check_quarantine_parity(n)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# (5) scoring + adaptive-aggregate units
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_scatter_update_handles_duplicates_and_padding():
+    from repro.core.load_metric import ewma_scatter_update
+
+    vec = jnp.zeros((4,), jnp.float32)
+    idx = jnp.asarray([1, 1, 3, 99])  # duplicate + out-of-range pad
+    vals = jnp.asarray([1.0, 1.0, 0.5, 7.0])
+    mask = jnp.asarray([True, True, True, False])
+    out = np.asarray(ewma_scatter_update(vec, idx, vals, mask, 0.5))
+    # duplicate slots both contribute their (identical) EWMA step
+    np.testing.assert_allclose(out, [0.0, 1.0, 0.0, 0.25])
+    # masked and out-of-range entries write nothing
+    again = np.asarray(ewma_scatter_update(
+        vec, idx, vals, jnp.zeros((4,), jnp.bool_), 0.5
+    ))
+    np.testing.assert_array_equal(again, np.zeros((4,)))
+
+
+def test_slot_scores_flag_flipped_and_scaled_outliers():
+    from repro.defense import DefenseConfig
+    from repro.defense.reputation import _slot_scores
+
+    key = jax.random.PRNGKey(0)
+    b = 8
+    base = {"w": jax.random.normal(key, (5, 3))}
+    honest = jax.random.normal(jax.random.fold_in(key, 1), (b, 5, 3)) * 0.1
+    deltas = honest.at[0].multiply(-3.0)  # the attacker slot
+    updated = {"w": base["w"][None] + deltas}
+    bases = {"w": jnp.broadcast_to(base["w"], (b, 5, 3))}
+    valid = jnp.ones((b,), bool)
+    scores = np.asarray(_slot_scores(
+        updated, bases, valid, jnp.zeros((b,), jnp.int32), DefenseConfig()
+    ))
+    assert scores[0] > scores[1:].max()
+    assert scores[0] > 0.5
+
+
+def test_adaptive_aggregate_level0_is_bitwise_base():
+    from repro.defense import adaptive_aggregate
+    from repro.engine.registry import make_aggregator
+
+    key = jax.random.PRNGKey(3)
+    g = {"w": jax.random.normal(key, (3, 4))}
+    updates = {"w": g["w"][None] + jax.random.normal(
+        jax.random.fold_in(key, 1), (8, 3, 4))}
+    w = jnp.ones((8,), jnp.float32)
+    idx = jnp.arange(8)
+    agg = make_aggregator("fedavg")
+
+    def base_apply(gp, u, b, wv, ix):
+        acc = agg.accumulate(agg.init(gp), u, b, wv)
+        from repro.engine.aggregators import acc_stats
+
+        return agg.finalize(gp, acc), acc_stats(acc)
+
+    wrapped = adaptive_aggregate(base_apply, (0.0, 0.2))
+    p0, _ = wrapped(g, updates, g, w, idx, jnp.int32(0))
+    pb, _ = base_apply(g, updates, g, w, idx)
+    _assert_trees_equal(p0, pb)
+    # level 1 applies the 0.2-trimmed mean of the deltas instead
+    p1, _ = wrapped(g, updates, g, w, idx, jnp.int32(1))
+    ref = make_aggregator("trimmed_mean", trim=0.2)
+    wr = ref.weigh(w > 0, jnp.zeros((8,), jnp.int32))
+    pr = ref.finalize(g, ref.accumulate(ref.init(g), updates, g, wr))
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(pr["w"]),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (6) satellites: exposure surface + order-stat aggregator contract
+# ---------------------------------------------------------------------------
+
+
+def test_fault_exposure_surface_matches_counters(small_task):
+    off = run_engine(make_engine(small_task, _cfg(
+        faults=("sign_flip",), fault_rate=0.5,
+    )))
+    assert off.fault_exposure is None
+    on = run_engine(make_engine(small_task, _cfg(
+        faults=("sign_flip",), fault_rate=0.5, fault_exposure=True,
+        collect_history=False, mesh_shards=0,
+    )))
+    exp = on.fault_exposure["sign_flip"]
+    assert exp.shape == (N,)
+    assert exp.sum() == on.load_stats["fault_sign_flip_injected"]
+
+
+def test_order_stat_aggregators_reject_staleness_kwargs():
+    with pytest.raises(ValueError, match="staleness"):
+        make_aggregator("trimmed_mean", trim=0.2, staleness_mode="poly")
+    with pytest.raises(ValueError, match="staleness"):
+        make_aggregator("coordinate_median", staleness_exp=0.5)
+
+
+def test_agg_unweighted_counter_in_engine_run(small_task):
+    res = run_engine(make_engine(small_task, _cfg(
+        aggregator="trimmed_mean", aggregator_kwargs={"trim": 0.25},
+    )))
+    # every aggregated slot was an unweighted order-stat vote
+    assert res.load_stats["agg_unweighted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# (7) serve tier: restarts + crash reputation
+# ---------------------------------------------------------------------------
+
+
+def test_penalized_load_preserves_dead_markers():
+    from repro.serve import penalized_load
+
+    load = jnp.asarray([1.0, np.inf, 0.0])
+    out = np.asarray(penalized_load(load, jnp.asarray([2.0, 2.0, 0.5])))
+    np.testing.assert_array_equal(out, [3.0, np.inf, 0.5])
+
+
+def test_serve_restart_revives_replicas():
+    from repro.configs import get_arch
+    from repro.faults import make_fault
+    from repro.models import factory
+    from repro.serve import Request, VersionStore, run_serve_loop
+
+    arch = get_arch("tinyllama-1.1b").reduced()
+    model = factory.build(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    store = VersionStore(
+        jax.tree.map(lambda p: jnp.stack([p] * 2), params),
+        jnp.asarray(1, jnp.int32), 2,
+    )
+    key = jax.random.PRNGKey(5)
+    reqs = [
+        Request(rid=i, tick=i % 4,
+                prompt=np.asarray(jax.random.randint(
+                    jax.random.fold_in(key, i), (4,), 0, arch.vocab_size)),
+                gen_len=3)
+        for i in range(10)
+    ]
+    kw = dict(router="least_loaded", n_replicas=3, slots=2, stagger=0,
+              seed=0, faults=[make_fault("replica_crash", 3, 0.3)])
+    rep = run_serve_loop(model, store, reqs, restart_ticks=2,
+                         reputation_penalty=0.5, **kw)
+    assert rep.serve_stats["crashes"] > 0
+    assert rep.serve_stats["revived"] > 0
+    assert len(rep.results) == len(reqs)
+    with pytest.raises(ValueError, match="restart_ticks"):
+        run_serve_loop(model, store, [], restart_ticks=-1, **kw)
