@@ -43,6 +43,25 @@ MIX_FRAC = 0.134
 DEFENSE = {"threshold": 0.55, "ewma": 0.5}
 MTD = {"mtd": True, "mtd_window": 4, "mtd_trims": (0.0, 0.15, 0.25, 0.35),
        "mtd_up": 0.1, "mtd_down": 0.02}
+# collusion-aware scoring: historical-direction sketches + residual
+# clique/flip channels on top of the same reputation chain. Sticky
+# quarantine (q_decay=1.0) keeps convicted clients benched for the
+# final census — with the default passive decay, colluders cycle
+# through readmission and the end-of-run status snapshot undercounts
+# them. The two detection rows pin two operating points of the same
+# detector: the threshold is the recall/FPR lever, and the collude
+# coalition drags honest FPR higher than a lone flip does (the shared
+# direction steers the norm-clipped-mean center, so honest cosine
+# scores misfire more often). A single shared config (threshold 0.60,
+# q_decay 0.995) also passes both gates but lands exactly on the
+# 0.80-recall / 0.05-FPR boundaries, so the rows keep margin instead.
+COLLUSION = {**DEFENSE, "ewma": 0.5, "collusion": True,
+             "clique_min_obs": 2, "q_decay": 1.0, "threshold": 0.60}
+COLLUSION_COALITION = {**COLLUSION, "threshold": 0.65}
+# the family ladder: same pressure window, rungs rotate aggregator
+# families instead of trim fractions
+MTD_FAMILIES = {**MTD, "mtd_families": ("base", "trimmed_mean",
+                                        "coordinate_median", "norm_clip")}
 
 
 def _mini_task(seed: int = 0):
@@ -77,14 +96,19 @@ def _time_chunks(engines, chunk: int, trials: int):
     return [float(np.median(t)) for t in times]
 
 
-def _detection_row(task, label, faults, fault_kwargs, rounds):
+def _detection_row(task, label, faults, fault_kwargs, rounds,
+                   defense_kwargs=None):
     """One detection-quality row: run armed defense against the attack,
-    score quarantine decisions against the exposure ground truth."""
+    score quarantine decisions against the exposure ground truth.
+    ``defense_kwargs`` defaults to the PR 9 z-score detector; pass
+    ``COLLUSION`` (or a ``detector="learned"`` config) to measure the
+    collusion-aware paths against the same ground truth."""
     cfg = RunConfig(
         n_clients=100, k=15, m=10, policy="markov", rounds=rounds,
         local_epochs=1, batch_size=10, eval_every=rounds,
         faults=faults, fault_rate=1.0, fault_kwargs=fault_kwargs,
-        fault_exposure=True, defense=True, defense_kwargs=dict(DEFENSE),
+        fault_exposure=True, defense=True,
+        defense_kwargs=dict(defense_kwargs or DEFENSE),
     )
     t0 = time.time()
     res = run_engine(SyncEngine(task, cfg))
@@ -98,14 +122,14 @@ def _detection_row(task, label, faults, fault_kwargs, rounds):
     recall = tp / max(int(hit.sum()), 1)
     precision = tp / max(tp + fp, 1)
     fpr = fp / max(int((~hit).sum()), 1)
-    print(f"  {label:12s}: {int(hit.sum())} clients hit -> "
+    print(f"  {label:18s}: {int(hit.sum())} clients hit -> "
           f"recall={recall:.2f} precision={precision:.2f} fpr={fpr:.3f} "
           f"(inflow {int(res.load_stats['def_quarantine_inflow'])}, "
           f"{dt:.1f}s)")
     return (
         f"defense_detection_{label}", 0.0,
         f"recall={recall:.2f};precision={precision:.2f};fpr={fpr:.3f}",
-    )
+    ), recall, fpr
 
 
 def run(csv_rows, rounds: int = 12, trials: int = 3):
@@ -136,22 +160,63 @@ def run(csv_rows, rounds: int = 12, trials: int = 3):
     det_rounds = max(2 * rounds, 24)
     print(f"\n== defense: detection quality vs exposure ground truth "
           f"(n=100, ~25% attackers, rounds={det_rounds}) ==")
-    csv_rows.append(_detection_row(
+    row, _, _ = _detection_row(
         task, "scale_attack", ("scale_attack",),
         {"scale_attack": {"factor": ATTACK_FACTOR,
                           "client_frac": ATTACK_FRAC}},
         det_rounds,
-    ))
-    csv_rows.append(_detection_row(
+    )
+    csv_rows.append(row)
+    row, _, _ = _detection_row(
         task, "sign_flip", ("sign_flip",),
         {"sign_flip": {"client_frac": ATTACK_FRAC}},
         det_rounds,
-    ))
-    csv_rows.append(_detection_row(
+    )
+    csv_rows.append(row)
+    row, _, _ = _detection_row(
         task, "scale_sign", ("scale_attack", "sign_flip"),
         {"scale_attack": {"factor": ATTACK_FACTOR, "client_frac": MIX_FRAC},
          "sign_flip": {"client_frac": MIX_FRAC}},
         det_rounds,
+    )
+    csv_rows.append(row)
+
+    # --- (b') collusion-aware detection: the attacks the z-score cannot
+    # see. Pure -1x sign-flip is norm-invisible (the committed zscore row
+    # pins recall ~0.10); the flip channel reads anti-alignment of the
+    # historical-direction sketch with the cohort center instead. The
+    # collude fault submits a shared poisoned direction norm-matched per
+    # slot — only the residual clique channel catches the coalition.
+    # These rows need more rounds than the norm-visible ones: at k=15 of
+    # n=100 a client is drawn ~7 times in 48 rounds, and the EWMA sketch
+    # needs several observations before its direction stops being noise.
+    col_rounds = max(4 * rounds, 48)
+    print(f"  (collusion-aware rows run rounds={col_rounds})")
+    row, r_flip, f_flip = _detection_row(
+        task, "sign_flip_clique", ("sign_flip",),
+        {"sign_flip": {"client_frac": ATTACK_FRAC}},
+        col_rounds, defense_kwargs=COLLUSION,
+    )
+    csv_rows.append(row)
+    row, r_col, f_col = _detection_row(
+        task, "collude", ("collude",),
+        {"collude": {"client_frac": ATTACK_FRAC}},
+        col_rounds, defense_kwargs=COLLUSION_COALITION,
+    )
+    csv_rows.append(row)
+    # the headline gate: both norm-invisible attacks at >= 0.8 recall,
+    # <= 5% FPR (vs 0.10 recall for the z-score detector on sign_flip)
+    col_ok = (r_flip >= 0.8 and r_col >= 0.8
+              and f_flip <= 0.05 and f_col <= 0.05)
+    print(f"  collusion-aware detection "
+          f"{'passes' if col_ok else 'FAILS'}: sign_flip recall="
+          f"{r_flip:.2f}/fpr={f_flip:.3f}, collude recall={r_col:.2f}"
+          f"/fpr={f_col:.3f}")
+    csv_rows.append((
+        "defense_collusion_recall", 0.0,
+        f"{'yes' if col_ok else 'NO'};flip_recall={r_flip:.2f};"
+        f"flip_fpr={f_flip:.3f};collude_recall={r_col:.2f};"
+        f"collude_fpr={f_col:.3f}",
     ))
 
     # --- (c) convergence: adaptive vs static robust vs fedavg ------------
@@ -188,6 +253,9 @@ def run(csv_rows, rounds: int = 12, trials: int = 3):
                           "aggregator_kwargs": {"trim": 0.35}}),
         ("adaptive", {"defense": True,
                       "defense_kwargs": {**DEFENSE, **MTD}}),
+        ("adaptive_family", {"defense": True,
+                             "defense_kwargs": {**DEFENSE,
+                                                **MTD_FAMILIES}}),
     ):
         last = converge(label, **kw)
         losses[label] = last.eval_loss
@@ -197,6 +265,20 @@ def run(csv_rows, rounds: int = 12, trials: int = 3):
         ))
     static = losses["trimmed_mean"]
     adaptive = losses["adaptive"]
+    family = losses["adaptive_family"]
+    # the family ladder must recover like the trim ladder does: within
+    # 10% of the static robust loss, strictly better than fedavg
+    fam_ok = (np.isfinite(family) and family <= static * 1.10
+              and (family < losses["fedavg"]
+                   or not np.isfinite(losses["fedavg"])))
+    print(f"  family ladder {'recovers' if fam_ok else 'DOES NOT recover'}: "
+          f"loss {family:.4f} vs static {static:.4f} "
+          f"vs fedavg {losses['fedavg']:.4f}")
+    csv_rows.append((
+        "defense_mtd_family_recovers", 0.0,
+        f"{'yes' if fam_ok else 'NO'};family={family:.4f};"
+        f"static={static:.4f};fedavg={losses['fedavg']:.4f}",
+    ))
     # the defense must land within 10% of the static robust loss while
     # fedavg (mean cancelled by the attackers) does strictly worse
     within = np.isfinite(adaptive) and adaptive <= static * 1.10

@@ -39,6 +39,10 @@ REQUIRED_BASELINE_ROWS = (
     # adaptive-vs-static-vs-fedavg recovery evidence row
     "defense_step_n100_armed",
     "defense_adaptive_recovers",
+    # collusion-aware detection (norm-invisible sign-flip + coalition
+    # recall/FPR gate) and the aggregator-family mtd recovery row
+    "defense_collusion_recall",
+    "defense_mtd_family_recovers",
 )
 
 

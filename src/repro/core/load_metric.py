@@ -237,6 +237,21 @@ def ewma_scatter_update(vec, idx, values, mask, alpha):
     return vec.at[idx].add(delta.astype(vec.dtype), mode="drop")
 
 
+def ewma_scatter_update_rows(mat, idx, rows, mask, alpha):
+    """Row-wise :func:`ewma_scatter_update` over an (n, d) per-client matrix.
+
+    ``mat[idx[j]] <- (1 - alpha) * mat[idx[j]] + alpha * rows[j]`` for every
+    slot with ``mask[j]``; masked slots contribute an exact add-of-zero, so
+    padded/duplicate idx entries stay race-free and an all-False mask is
+    bitwise identity. jit/scan-compatible; used by the defense tier's
+    historical-direction sketches.
+    """
+    import jax.numpy as jnp
+
+    delta = jnp.where(mask[:, None], alpha * (rows - mat[idx]), 0.0)
+    return mat.at[idx].add(delta.astype(mat.dtype), mode="drop")
+
+
 def init_selection_accum(n: int, expected_cohort: int = 0):
     """Fresh accumulator pytree for an ``n``-client fleet.
 

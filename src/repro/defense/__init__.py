@@ -6,13 +6,17 @@ The package import is lazy so ``RunConfig``'s eager defense validation
 (``repro.defense.config`` is a plain dataclass module) stays jax-free;
 the jnp runtime loads only when an engine builds it.
 """
-from repro.defense.config import DefenseConfig
+from repro.defense.config import DETECTORS, MTD_FAMILIES, DefenseConfig
 
 __all__ = [
     "DEFENSE_FOLD",
+    "DETECTORS",
     "Defense",
     "DefenseConfig",
+    "MTD_FAMILIES",
     "adaptive_aggregate",
+    "auc_from_hist",
+    "clique_scores",
     "make_defense",
 ]
 
@@ -26,4 +30,12 @@ def __getattr__(name):
         from repro.defense.adaptive import adaptive_aggregate
 
         return adaptive_aggregate
+    if name == "clique_scores":
+        from repro.defense.collusion import clique_scores
+
+        return clique_scores
+    if name == "auc_from_hist":
+        from repro.defense.learned import auc_from_hist
+
+        return auc_from_hist
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

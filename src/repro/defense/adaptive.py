@@ -1,17 +1,31 @@
 """Moving-target aggregation: rotate the robust rule online.
 
 ``adaptive_aggregate`` wraps the engines' aggregate hook. Level 0 on
-the mtd trim ladder is the configured base rule, selected through
-``lax.cond`` so a calm fleet never pays for (or perturbs — the taken
-branch is bitwise) the alternative; level L >= 1 swaps in a trimmed
-mean whose trim fraction is read from the ladder *inside* the jitted
-step — the rotation is carry state, not a recompile.
+the mtd ladder is the configured base rule, selected through
+``lax.cond``/``lax.switch`` so a calm fleet never pays for (or perturbs
+— the taken branch is bitwise) the alternatives; level L >= 1 swaps in
+a robust rule selected *inside* the jitted step — the rotation is carry
+state, not a recompile.
 
-The trimmed mean here is the dynamic-trim twin of
-``engine.robust.make_trimmed_mean``: identical sort/rank arithmetic,
-but ``trim`` is a traced scalar. It is an order statistic over the
-whole cohort axis, hence non-additive — config rejects mtd under
-tiered topologies and cohort-sharded aggregation up front.
+Two ladder shapes. The default (``mtd_families=None``) walks trim
+fractions of one rule: a trimmed mean whose traced ``trim`` is read
+from ``mtd_trims[level]``. With ``mtd_families`` the rungs rotate
+across aggregator *families* — an attacker who has tuned an evasion
+against one robust rule (scale just under the trim quantile, collude
+through the median's blind coordinates) finds the target moved:
+
+  * ``base``              — the engine's configured rule, untouched
+  * ``trimmed_mean``      — static per-rung trim from ``mtd_trims``
+  * ``coordinate_median`` — parameter-free, maximum breakdown
+  * ``norm_clip``         — per-slot L2 clip at the cohort's *median*
+                            delta norm (dynamic; the static-clip twin
+                            lives in ``engine.robust``)
+
+Each family mirrors the sort/rank/clip arithmetic of its
+``engine.robust`` registry twin. All of these are order statistics or
+norm statistics over the whole cohort axis, hence non-additive —
+config rejects mtd under tiered topologies and cohort-sharded
+aggregation up front.
 """
 from __future__ import annotations
 
@@ -44,23 +58,109 @@ def _trimmed_mean_delta(g, updates, bases, w, trim):
     return tree_where(c > 0, moved, g)  # empty cohort: params stand
 
 
-def adaptive_aggregate(base_apply, trims):
+def _coordinate_median_delta(g, updates, bases, w):
+    """g + per-coordinate median of valid deltas — the lo/hi sorted-rank
+    pick of ``engine.robust.make_coordinate_median``, inlined."""
+    valid = w > 0
+    c = valid.astype(jnp.int32).sum()
+    lo = jnp.maximum((c - 1) // 2, 0)
+    hi = jnp.maximum(c // 2, 0)
+
+    def one(gl, u, b):
+        ws = (-1,) + (1,) * (u.ndim - 1)
+        d = jnp.where(valid.reshape(ws), (u - b).astype(jnp.float32),
+                      jnp.inf)
+        d_sorted = jnp.sort(d, axis=0)
+        ranks = jnp.arange(u.shape[0]).reshape(ws)
+        pick = jnp.where(c > 0,
+                         (ranks == lo).astype(jnp.float32)
+                         + (ranks == hi).astype(jnp.float32), 0.0)
+        med = jnp.where(
+            c > 0, jnp.sum(jnp.where(pick > 0, d_sorted * pick, 0.0),
+                           axis=0) / 2.0, 0.0)
+        return (gl + med.astype(gl.dtype)).astype(gl.dtype)
+
+    moved = jax.tree.map(one, g, updates, bases)
+    return tree_where(c > 0, moved, g)
+
+
+def _norm_clip_delta(g, updates, bases, w):
+    """g + weighted mean of deltas L2-clipped at the cohort's *median*
+    delta norm — ``engine.robust.make_norm_clip`` arithmetic with the
+    static clip replaced by a per-cohort order statistic, so the rung
+    needs no tuned radius."""
+    valid = w > 0
+    c = valid.astype(jnp.int32).sum()
+    lo = jnp.maximum((c - 1) // 2, 0)
+    hi = jnp.maximum(c // 2, 0)
+
+    nonb = lambda d: tuple(range(1, d.ndim))  # noqa: E731
+    deltas = jax.tree.map(
+        lambda u, b: (u - b).astype(jnp.float32), updates, bases)
+    sq = sum(jnp.sum(d * d, axis=nonb(d)) for d in jax.tree.leaves(deltas))
+    norm = jnp.sqrt(sq)
+    ns = jnp.sort(jnp.where(valid, norm, jnp.inf))
+    clip = jnp.where(c > 0, (ns[lo] + ns[hi]) / 2.0, 0.0)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    ws = w * scale
+    wsum = w.sum()
+    denom = jnp.maximum(wsum, 1e-9)
+
+    def one(gl, d):
+        ds = jnp.sum(d * ws.reshape((-1,) + (1,) * (d.ndim - 1)), axis=0)
+        return (gl + (ds / denom).astype(gl.dtype)).astype(gl.dtype)
+
+    moved = jax.tree.map(one, g, deltas)
+    return tree_where(wsum > 0, moved, g)
+
+
+def _family_branch(fam, trim):
+    """One ``lax.switch`` rung: (g, updates, bases, w, base_params) ->
+    params. ``trim`` is static per rung (read from ``mtd_trims``)."""
+    if fam == "base":
+        return lambda g, u, b, w, bp: bp
+    if fam == "trimmed_mean":
+        return lambda g, u, b, w, bp: _trimmed_mean_delta(g, u, b, w, trim)
+    if fam == "coordinate_median":
+        return lambda g, u, b, w, bp: _coordinate_median_delta(g, u, b, w)
+    if fam == "norm_clip":
+        return lambda g, u, b, w, bp: _norm_clip_delta(g, u, b, w)
+    raise ValueError(f"unknown mtd family {fam!r}")  # config validated
+
+
+def adaptive_aggregate(base_apply, trims, families=None):
     """Wrap an engine aggregate hook with the mtd ladder.
 
     Returns ``apply(g, updates, bases, w, idx, level)``; the base
     rule's stats are surfaced whatever the level, so counters like
     ``agg_clipped`` keep their meaning while the ladder is hot.
+    ``families`` (validated upstream: same length as ``trims``, entry 0
+    ``"base"``) switches the ladder from trim fractions to aggregator
+    families; level 0 passes the base rule's params through untouched
+    either way.
     """
     trims_dev = jnp.asarray(trims, jnp.float32)
 
+    if families is None:
+        def apply(g, updates, bases, w, idx, level):
+            base_params, stats = base_apply(g, updates, bases, w, idx)
+            params = jax.lax.cond(
+                level > 0,
+                lambda: _trimmed_mean_delta(g, updates, bases, w,
+                                            trims_dev[level]),
+                lambda: base_params,
+            )
+            return params, stats
+
+        return apply
+
+    branches = [_family_branch(f, float(t)) for f, t in zip(families, trims)]
+
     def apply(g, updates, bases, w, idx, level):
         base_params, stats = base_apply(g, updates, bases, w, idx)
-        params = jax.lax.cond(
-            level > 0,
-            lambda: _trimmed_mean_delta(g, updates, bases, w,
-                                        trims_dev[level]),
-            lambda: base_params,
-        )
+        lvl = jnp.clip(level, 0, len(branches) - 1)
+        params = jax.lax.switch(lvl, branches, g, updates, bases, w,
+                                base_params)
         return params, stats
 
     return apply

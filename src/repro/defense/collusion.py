@@ -1,0 +1,166 @@
+"""Collusion scoring: historical-direction sketches and clique detection.
+
+A coalition submitting a shared poisoned direction is invisible to
+per-slot norm statistics and can steer the norm-clipped-mean center the
+cosine score is measured against. What a coalition *cannot* hide is
+agreement with itself over time: every member's update direction keeps
+pointing the same way while honest clients' directions decorrelate
+round to round (data heterogeneity + SGD noise).
+
+The memory-bounded signal is a count-sketch: each slot's update delta is
+projected into ``d_sketch`` dims (fixed random signed-bucket projection,
+generated host-side from a hard-coded seed at trace time, so single- and
+sharded-engine runs embed identical constants) and EWMA'd into a
+per-client ``(n, d_sketch)`` historical sketch riding the scan carry —
+O(n) memory like every other defense leaf, and sharded ``P(fleet)`` by
+the usual shape[0]==n rule.
+
+Scoring is FoolsGold-flavoured but *residual-centered*: the EWMA
+averages away idiosyncratic noise, so raw pairwise cosine over histories
+saturates near 1 for everyone once honest clients align. Subtracting
+the cohort's coordinate-median sketch first makes honest residuals
+decorrelate (cos ~ N(0, 1/d_sketch)) while clique members share the
+(poison - center) residual (cos ~ 1). A residual-norm gate keeps
+well-aligned honest clients (tiny residuals, direction dominated by
+noise) out of the pairing entirely. A separate "flip" channel scores
+anti-alignment of a history with the cohort center — the signature a
+pure -1x sign-flip leaves even when acting alone.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.load_metric import ewma_scatter_update_rows
+from repro.defense.config import DefenseConfig
+
+# Host-side RNG seed for the signed-bucket projection. Fixed so the
+# projection is a pure function of the leaf shapes: every engine (chunked,
+# sharded, restarted) embeds bit-identical constants.
+PROJECTION_SEED = 0x5EEDC11E
+
+# residual L2-norm gate: unit-normalized histories sit within 2 of any
+# center, honest residuals measure ~sqrt(1 - |center|^2) plus noise
+RESID_GATE = 0.8
+# center-norm gate for the flip channel: with no cohort consensus there
+# is nothing to anti-align with
+CENTER_GATE = 0.2
+# flip-score half-point: a converged flipped sketch reads anti-alignment
+# fx ~ 0.2-0.4 (honest late-training alignment is weak, never strong)
+# while honest noise sits under ~0.05, so fx/(fx + FLIP_HALF) pushes
+# real flips well past the noise floor
+FLIP_HALF = 0.15
+
+_PROJ_CACHE: dict = {}
+
+
+def _projection(shapes, d_sketch: int):
+    """Per-leaf (bucket, sign) projection constants, cached by shape."""
+    key = (tuple(shapes), int(d_sketch))
+    cached = _PROJ_CACHE.get(key)
+    if cached is None:
+        rng = np.random.default_rng(PROJECTION_SEED)
+        cached = []
+        for shp in shapes:
+            m = int(np.prod(shp, dtype=np.int64)) if shp else 1
+            h = rng.integers(0, d_sketch, size=m).astype(np.int32)
+            s = (rng.integers(0, 2, size=m) * 2 - 1).astype(np.float32)
+            cached.append((h, s))
+        _PROJ_CACHE[key] = cached
+    return cached
+
+
+def project_deltas(updated, bases, d_sketch: int):
+    """Count-sketch each slot's update delta into (B, d_sketch) unit rows.
+
+    ``bases`` may be stacked ``(B, ...)`` dispatch snapshots (async) or
+    the unstacked global params (sync); both broadcast. Zero deltas stay
+    exact zero rows (they carry no direction evidence).
+    """
+    lu, lb = jax.tree.leaves(updated), jax.tree.leaves(bases)
+    shapes = tuple(tuple(u.shape[1:]) for u in lu)
+    planes = _projection(shapes, d_sketch)
+    b = lu[0].shape[0]
+    out = jnp.zeros((b, d_sketch), jnp.float32)
+    for (h, s), u, base in zip(planes, lu, lb):
+        d = (u - base).astype(jnp.float32).reshape(b, -1)
+        out = out + jax.ops.segment_sum(
+            (d * s[None, :]).T, jnp.asarray(h), num_segments=d_sketch).T
+    nrm = jnp.sqrt(jnp.sum(out * out, axis=1, keepdims=True))
+    return jnp.where(nrm > 1e-12, out / jnp.maximum(nrm, 1e-12), 0.0)
+
+
+def clique_scores(hists, obs, valid, idx, cfg: DefenseConfig):
+    """Per-slot (s_clique, s_flip) in [0, 1] from gathered history rows.
+
+    Pure in its array arguments and slot-permutation equivariant:
+    every reduction over the slot axis is a sort or a max, so permuting
+    ``(hists, obs, valid, idx)`` permutes the outputs — exactly up to
+    float reassociation in the two matmuls (GEMM tiling picks per-
+    position micro-kernels, worth ~1 ulp). The engines' bitwise
+    replay/sharding contracts are unaffected: they always present the
+    cohort in the same slot order.
+
+    ``idx`` guards self-pairing: duplicate slots of one client (async
+    re-dispatch races) agree with themselves trivially and must not form
+    a "clique" of one.
+    """
+    b = hists.shape[0]
+    hn = jnp.sqrt(jnp.sum(hists * hists, axis=1, keepdims=True))
+    hu = jnp.where(hn > 1e-12, hists / jnp.maximum(hn, 1e-12), 0.0)
+    seen = valid & (obs >= cfg.clique_min_obs) & (hn[:, 0] > 1e-12)
+
+    # masked coordinate median of seen histories -> cohort center sketch
+    m = seen.astype(jnp.int32).sum()
+    lo = jnp.maximum((m - 1) // 2, 0)
+    hi = jnp.maximum(m // 2, 0)
+    col = jnp.sort(jnp.where(seen[:, None], hu, jnp.inf), axis=0)
+    center = jnp.where(m > 0, (col[lo] + col[hi]) / 2.0, 0.0)  # (d,)
+    cn = jnp.sqrt(jnp.sum(center * center))
+    cu = jnp.where(cn > 1e-12, center / jnp.maximum(cn, 1e-12), 0.0)
+
+    # flip channel: anti-alignment with the consensus direction
+    align = hu @ cu  # (B,)
+    fx = jnp.maximum(-align, 0.0)
+    s_flip = jnp.where(seen & (cn > CENTER_GATE), fx / (fx + FLIP_HALF), 0.0)
+
+    # clique channel: pairwise agreement of *residual* directions
+    resid = hu - center[None, :]
+    rn = jnp.sqrt(jnp.sum(resid * resid, axis=1))
+    elig = seen & (rn > RESID_GATE)
+    ru = jnp.where(rn[:, None] > 1e-12,
+                   resid / jnp.maximum(rn[:, None], 1e-12), 0.0)
+    cs = ru @ ru.T  # (B, B)
+    pair = elig[:, None] & elig[None, :] & (idx[:, None] != idx[None, :])
+    maxcs = jnp.max(jnp.where(pair, cs, -1.0), axis=1)
+    s_clique = jnp.where(
+        elig,
+        jnp.clip((maxcs - cfg.clique_thresh) / (1.0 - cfg.clique_thresh),
+                 0.0, 1.0),
+        0.0)
+    return s_clique, s_flip
+
+
+def collusion_observe(dstate, updated, bases, idx, valid,
+                      cfg: DefenseConfig):
+    """Update the sketches with this cohort and score it.
+
+    Returns ``(dstate, s_clique, s_flip)``; the caller turns ``s_clique``
+    into both a reputation term and the aggregation-weight discount
+    ``1 - s_clique`` (exact 1.0 for every clique-free slot, so a calm
+    armed run multiplies weights by exact ones).
+    """
+    rows = project_deltas(updated, bases, cfg.d_sketch)
+    sketch = ewma_scatter_update_rows(
+        dstate["sketch"], idx, rows, valid, cfg.sketch_ewma)
+    sk_obs = dstate["sk_obs"].at[idx].add(
+        jnp.where(valid, 1.0, 0.0), mode="drop")
+    hists = sketch[idx]
+    obs = sk_obs[idx]
+    s_clique, s_flip = clique_scores(hists, obs, valid, idx, cfg)
+    hits = jnp.sum(jnp.where(valid & (s_clique > 0.5), 1.0, 0.0))
+    dstate = {**dstate, "sketch": sketch, "sk_obs": sk_obs,
+              "clique_hits": dstate["clique_hits"] + hits}
+    return dstate, s_clique, s_flip

@@ -1,0 +1,113 @@
+"""Learned online detection: a logistic head trained inside the scan.
+
+``detector="learned"`` replaces the fixed OR-combination of anomaly
+channels with a tiny logistic regression over the per-slot feature
+vector — norm z, cosine z, clique score, flip score, shaped staleness,
+shaped age-of-information, and a robust loss-delta z — trained one SGD
+step per observed cohort, inside the jitted scan step.
+
+Labels: when the run arms ``fault_exposure`` the engines pass the
+per-slot fault-hit mask (evaluation mode — ground truth the defense
+could never see in production); otherwise the head self-supervises
+against its own quarantine outcomes (a slot is "bad" if its client is
+already hot or benched), which bootstraps the head off whatever channel
+first fires.
+
+Cold start is safe by construction: a zero weight vector scores every
+slot sigmoid(0) = 0.5, below the default 0.55 quarantine threshold, so
+an untrained head never quarantines anyone.
+
+State (shapes chosen to dodge the sharded engine's shape[0]==n rule —
+a bare ``(F,)`` or ``(16,)`` leaf would be wrongly fleet-sharded on a
+fleet of exactly that size):
+
+  lw   (1, F)   f32  logistic head weights (feature order above + bias)
+  auc  (2, 16)  f32  score histograms, row 0 fault/positive slots,
+                     row 1 clean/negative — exact AUC at report time
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.defense.config import DefenseConfig
+
+N_FEATURES = 8
+N_BINS = 16
+
+
+def _robust_one_sided_z(x, valid, floor):
+    """z of x above the cohort's masked median, MAD-scaled (like the
+    norm channel in :func:`repro.defense.reputation._slot_channels`)."""
+    vcount = valid.astype(jnp.int32).sum()
+    lo = jnp.maximum((vcount - 1) // 2, 0)
+    hi = jnp.maximum(vcount // 2, 0)
+    xs = jnp.sort(jnp.where(valid, x, jnp.inf))
+    med = jnp.where(vcount > 0, (xs[lo] + xs[hi]) / 2.0, 0.0)
+    ads = jnp.sort(jnp.where(valid, jnp.abs(x - med), jnp.inf))
+    mad = jnp.where(vcount > 0, (ads[lo] + ads[hi]) / 2.0, 0.0)
+    scale = jnp.maximum(1.4826 * mad, floor)
+    return jnp.maximum((x - med) / scale, 0.0)
+
+
+def feature_matrix(s_norm, s_dir, s_clique, s_flip, staleness, ages,
+                   losses, valid):
+    """(B, N_FEATURES) per-slot features, every channel in [0, 1]."""
+    st = staleness.astype(jnp.float32)
+    stale_f = 1.0 - (1.0 + st) ** -0.5
+    if ages is None:
+        age_f = jnp.zeros_like(s_norm)
+    else:
+        ag = jnp.maximum(ages.astype(jnp.float32), 0.0)
+        age_f = 1.0 - (1.0 + ag) ** -0.5
+    if losses is None:
+        loss_f = jnp.zeros_like(s_norm)
+    else:
+        zl = _robust_one_sided_z(losses.astype(jnp.float32), valid, 0.05)
+        loss_f = zl / (zl + 3.0)
+    ones = jnp.ones_like(s_norm)
+    return jnp.stack(
+        [s_norm, s_dir, s_clique, s_flip, stale_f, age_f, loss_f, ones],
+        axis=1)
+
+
+def learned_observe(dstate, feats, valid, labels, cfg: DefenseConfig):
+    """Score this cohort with the current head, then train one step.
+
+    Returns ``(dstate, scores)`` where ``scores`` are the pre-update
+    sigmoid probabilities — the online prediction, never contaminated
+    by this cohort's own labels.
+    """
+    w = dstate["lw"][0]
+    p = jax.nn.sigmoid(feats @ w)  # (B,)
+
+    y = jnp.where(valid, labels.astype(jnp.float32), 0.0)
+    grad = jnp.sum(
+        jnp.where(valid[:, None], (p - y)[:, None] * feats, 0.0), axis=0)
+    cnt = valid.sum(dtype=jnp.float32)
+    w_new = w - cfg.learned_lr * grad / jnp.maximum(cnt, 1.0)
+
+    bins = jnp.clip((p * N_BINS).astype(jnp.int32), 0, N_BINS - 1)
+    auc = dstate["auc"]
+    auc = auc.at[0, bins].add(jnp.where(valid & (y > 0.5), 1.0, 0.0))
+    auc = auc.at[1, bins].add(jnp.where(valid & (y <= 0.5), 1.0, 0.0))
+
+    dstate = {**dstate, "lw": w_new[None, :], "auc": auc}
+    return dstate, p
+
+
+def auc_from_hist(hist) -> float:
+    """Exact ROC AUC from the (2, N_BINS) score histograms (host side).
+
+    Ties within a bin count half, the standard rank-statistic handling;
+    NaN when either class has not been observed yet.
+    """
+    h = np.asarray(hist, np.float64)
+    pos, neg = h[0], h[1]
+    p_tot, n_tot = pos.sum(), neg.sum()
+    if p_tot <= 0 or n_tot <= 0:
+        return float("nan")
+    neg_below = np.concatenate([[0.0], np.cumsum(neg)[:-1]])
+    return float((pos * (neg_below + 0.5 * neg)).sum() / (p_tot * n_tot))

@@ -19,6 +19,17 @@ engine via the usual shape[0]==n rule; scalars replicate):
   win_obs     ()   f32  windowed observed-slot count (mtd)
   win         ()   i32  steps into the current mtd window
   level       ()   i32  current rung on the mtd trim ladder
+
+armed only with ``collusion=True`` (see :mod:`repro.defense.collusion`):
+
+  sketch      (n, d_sketch) f32  EWMA historical-direction sketches
+  sk_obs      (n,) f32  sketch observation counts
+  clique_hits ()   f32  cumulative clique-discounted slot count
+
+armed only with ``detector="learned"`` (see :mod:`repro.defense.learned`):
+
+  lw          (1, F)  f32  logistic-head weights
+  auc         (2, 16) f32  pos/neg score histograms for exact AUC
 """
 from __future__ import annotations
 
@@ -26,21 +37,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.load_metric import ewma_scatter_update
+from repro.defense.collusion import collusion_observe
 from repro.defense.config import DefenseConfig
+from repro.defense.learned import (
+    N_BINS, N_FEATURES, auc_from_hist, feature_matrix, learned_observe)
 
 DEFENSE_FOLD = 108  # per-step key fold off k_sel, after faults (105) + rd
 
 
-def _slot_scores(updated, bases, valid, staleness, cfg: DefenseConfig):
-    """Per-cohort-slot anomaly scores in [0, 1].
+def _slot_channels(updated, bases, valid):
+    """Raw per-cohort-slot anomaly channels ``(s_norm, s_dir, norm)``.
 
-    Two signals, OR-combined: (a) the slot delta's L2-norm z-score
-    against the cohort's median/MAD norm, (b) misalignment (cosine) with
-    the cohort's robust center — a norm-clipped mean, which a minority
-    of scaled/flipped attackers cannot steer the way they cancel the
-    plain mean. Optional staleness and hard-clip terms ride on top.
-    ``bases`` may be stacked ``(B, ...)`` (async dispatch snapshots) or
-    the unstacked global params (sync); both broadcast.
+    (a) the slot delta's L2-norm z-score against the cohort's median/MAD
+    norm, (b) misalignment (cosine) with the cohort's robust center — a
+    norm-clipped mean, which a minority of scaled/flipped attackers
+    cannot steer the way they cancel the plain mean. ``bases`` may be
+    stacked ``(B, ...)`` (async dispatch snapshots) or the unstacked
+    global params (sync); both broadcast.
     """
     lu, lb = jax.tree.leaves(updated), jax.tree.leaves(bases)
     deltas = [(u - b).astype(jnp.float32) for u, b in zip(lu, lb)]
@@ -84,14 +97,26 @@ def _slot_scores(updated, bases, valid, staleness, cfg: DefenseConfig):
     # plateau just under any usable threshold
     zc = jnp.maximum((cmed - cos) / cscale, 0.0)
     s_dir = zc / (zc + 1.5)
+    return s_norm, s_dir, norm
 
-    score = 1.0 - (1.0 - s_norm) * (1.0 - s_dir)
+
+def _shape_scores(score, norm, staleness, cfg: DefenseConfig):
+    """Optional staleness and hard-clip terms on top of a raw score."""
     if cfg.stale_gain > 0.0:
         st = staleness.astype(jnp.float32)
         score = jnp.maximum(score, cfg.stale_gain * (1.0 - (1.0 + st) ** -0.5))
     if cfg.clip > 0.0:
         score = jnp.where(norm > cfg.clip, 1.0, score)
     return score
+
+
+def _slot_scores(updated, bases, valid, staleness, cfg: DefenseConfig):
+    """Per-cohort-slot anomaly scores in [0, 1]: the norm and cosine
+    channels of :func:`_slot_channels`, OR-combined, with the optional
+    staleness and hard-clip terms riding on top."""
+    s_norm, s_dir, norm = _slot_channels(updated, bases, valid)
+    score = 1.0 - (1.0 - s_norm) * (1.0 - s_dir)
+    return _shape_scores(score, norm, staleness, cfg)
 
 
 class Defense:
@@ -105,10 +130,24 @@ class Defense:
     def mtd(self) -> bool:
         return self.cfg.mtd
 
+    @property
+    def collusion(self) -> bool:
+        return self.cfg.collusion
+
+    @property
+    def learned(self) -> bool:
+        return self.cfg.detector == "learned"
+
+    @property
+    def wants_labels(self) -> bool:
+        """Whether the engines should pass fault-hit ground truth
+        (only consumed by the learned head, only when exposure is on)."""
+        return self.learned
+
     def init(self):
         n = self.n
         z = jnp.zeros(())
-        return {
+        state = {
             "rep": jnp.zeros((n,), jnp.float32),
             "status": jnp.zeros((n,), jnp.int32),
             "quarantined": z, "readmitted": z,
@@ -116,23 +155,69 @@ class Defense:
             "win": jnp.zeros((), jnp.int32),
             "level": jnp.zeros((), jnp.int32),
         }
+        if self.collusion:
+            state["sketch"] = jnp.zeros((n, self.cfg.d_sketch), jnp.float32)
+            state["sk_obs"] = jnp.zeros((n,), jnp.float32)
+            state["clique_hits"] = z
+        if self.learned:
+            # (1, F) / (2, 16): a bare (F,) or (16,) leaf would collide
+            # with the sharded engine's shape[0]==n fleet-leaf rule on
+            # small test fleets
+            state["lw"] = jnp.zeros((1, N_FEATURES), jnp.float32)
+            state["auc"] = jnp.zeros((2, N_BINS), jnp.float32)
+        return state
 
     def blocked(self, dstate):
         """(n,) bool — barred from selection (quarantined only;
         probation clients are selectable so they generate evidence)."""
         return dstate["status"] == 1
 
-    def observe(self, dstate, key, updated, bases, idx, valid, staleness):
+    def observe(self, dstate, key, updated, bases, idx, valid, staleness,
+                losses=None, ages=None, labels=None):
         """Score the cohort, update reputation, run the quarantine
         chain, and advance the mtd pressure window.
 
-        Returns ``(dstate, excluded)`` where ``excluded`` is the (n,)
-        post-transition suspect mask (status != 0) the caller must apply
-        to the aggregation validity — the same seam heartbeat dark
-        clients use.
+        Returns ``(dstate, excluded, w_scale)``: ``excluded`` is the
+        (n,) post-transition suspect mask (status != 0) the caller must
+        apply to the aggregation validity — the same seam heartbeat dark
+        clients use; ``w_scale`` is a (B,) per-slot aggregation-weight
+        discount (``1 - s_clique``) when collusion scoring is armed,
+        else None. ``losses``/``ages`` feed the learned head's feature
+        vector; ``labels`` is the per-slot fault-hit ground truth when
+        ``fault_exposure`` arms evaluation mode (None -> the head
+        self-supervises against its own quarantine outcomes).
         """
         cfg = self.cfg
-        scores = _slot_scores(updated, bases, valid, staleness, cfg)
+        w_scale = None
+        if not self.collusion and not self.learned:
+            # PR 9 path, bit-for-bit: same ops, same order
+            scores = _slot_scores(updated, bases, valid, staleness, cfg)
+        else:
+            s_norm, s_dir, norm = _slot_channels(updated, bases, valid)
+            if self.collusion:
+                dstate, s_clique, s_flip = collusion_observe(
+                    dstate, updated, bases, idx, valid, cfg)
+                w_scale = 1.0 - s_clique
+            else:
+                s_clique = jnp.zeros_like(s_norm)
+                s_flip = jnp.zeros_like(s_norm)
+            if self.learned:
+                feats = feature_matrix(s_norm, s_dir, s_clique, s_flip,
+                                       staleness, ages, losses, valid)
+                if labels is None:
+                    # deployment mode: self-supervise against outcomes
+                    labels = ((dstate["rep"][idx] > cfg.threshold)
+                              | (dstate["status"][idx] != 0))
+                dstate, scores = learned_observe(
+                    dstate, feats, valid, labels, cfg)
+                # staleness already sits in the feature vector; the
+                # hard norm clip stays as a non-negotiable override
+                if cfg.clip > 0.0:
+                    scores = jnp.where(norm > cfg.clip, 1.0, scores)
+            else:
+                score = 1.0 - ((1.0 - s_norm) * (1.0 - s_dir)
+                               * (1.0 - s_clique) * (1.0 - s_flip))
+                scores = _shape_scores(score, norm, staleness, cfg)
 
         status = dstate["status"]
         # passive decay while benched, then fresh evidence (probation
@@ -179,7 +264,7 @@ class Defense:
                 win_obs=jnp.where(done, zero, obs),
                 win=jnp.where(done, 0, win), level=level,
             )
-        return out, out["status"] != 0
+        return out, out["status"] != 0, w_scale
 
     # ---- host-side reporting ------------------------------------------
 
@@ -188,13 +273,18 @@ class Defense:
         import numpy as np
 
         status = np.asarray(dstate["status"])
-        return {
+        out = {
             "def_quarantine_inflow": float(dstate["quarantined"]),
             "def_readmitted": float(dstate["readmitted"]),
             "def_quarantined_now": int((status == 1).sum()),
             "def_probation_now": int((status == 2).sum()),
             "def_mtd_level": int(dstate["level"]),
         }
+        if self.collusion:
+            out["def_clique_hits"] = float(dstate["clique_hits"])
+        if self.learned:
+            out["def_detector_auc"] = auc_from_hist(dstate["auc"])
+        return out
 
     def arrays(self, dstate):
         """Per-client reputation/status for ``RunResult.defense``."""

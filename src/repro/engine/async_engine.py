@@ -321,6 +321,16 @@ def _make_async_step(
     kill_on = have_faults and faults.has("kill")
     if have_faults and (faults.has("scale") or faults.has("noise")):
         from repro.faults.inject import corrupt_updates
+    collude_on = have_faults and faults.has("collude")
+    if collude_on:
+        from repro.faults.inject import collude_updates
+    col_on = have_def and defense.collusion
+    # supervised labels for the learned detector head: only when the run
+    # opted into exposure ground truth AND some fault actually pops
+    sup_on = (have_def and defense.wants_labels and have_faults
+              and faults.has_pop and cfg.fault_exposure)
+    if sup_on:
+        from repro.faults.inject import effects_hit
     if tiered:
         from repro.core.load_metric import init_tier_accum, update_tier_accum
         from repro.topo.reduce import make_hop_latency, tiered_apply
@@ -352,7 +362,8 @@ def _make_async_step(
         # default; level 0 routes through it untouched via lax.cond
         from repro.defense.adaptive import adaptive_aggregate
 
-        aggregate_mtd = adaptive_aggregate(aggregate, defense.cfg.mtd_trims)
+        aggregate_mtd = adaptive_aggregate(aggregate, defense.cfg.mtd_trims,
+                                           families=defense.cfg.mtd_families)
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
@@ -550,6 +561,12 @@ def _make_async_step(
                 updated, disp_params, eff, jax.random.fold_in(k_fault, 2),
                 faults.has("scale"), faults.has("noise"),
             )
+        if collude_on:
+            # after corrupt: a coalition member's replacement is
+            # authoritative over any scale/noise it also drew. Keyless —
+            # the direction is a trace-time constant, the jitter rode
+            # the fault's own pop fold
+            updated = collude_updates(updated, disp_params, eff)
 
         # --- buffered aggregation of deltas through the aggregator seam
         succ = valid & ~ev["dropped"][idx]
@@ -577,12 +594,19 @@ def _make_async_step(
             # the reduction through the exact seam heartbeat dark
             # clients use, closing the detect->quarantine loop within
             # the step
-            dstate, suspect = defense.observe(
+            dstate, suspect, w_scale = defense.observe(
                 dstate, jax.random.fold_in(k_sel, 108),
                 updated, disp_params, idx, succ, staleness,
+                losses=losses, ages=cohort_layout(sched["ages"][idx]),
+                labels=cohort_layout(effects_hit(eff)) if sup_on else None,
             )
             succ = succ & ~cohort_layout(suspect[idx])
         w = agg.weigh(succ, staleness)
+        if col_on:
+            # clique members keep a (discounted) vote rather than a
+            # binary exclusion: w_scale is exact 1.0 on clique-free
+            # slots, so a calm armed run multiplies by ones
+            w = w * w_scale
         wsum = w.sum()
         has = wsum > 0
         denom = jnp.maximum(wsum, 1e-9)

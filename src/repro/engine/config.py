@@ -232,6 +232,18 @@ class RunConfig:
             # resolve eagerly (jax-free DefenseConfig) so a bad knob
             # fails at config construction, like topology resolution
             dcfg = self.resolved_defense()
+            if self.shard_cohort and (dcfg.collusion
+                                      or dcfg.detector != "zscore"):
+                raise ValueError(
+                    "collusion scoring and the learned detector keep "
+                    "whole-cohort state (pairwise similarity, one "
+                    "logistic head) that is not psum-mergeable under "
+                    "shard_cohort — drop shard_cohort (fleet sharding "
+                    "via --mesh-shards *without* --shard-cohort works: "
+                    "the (n, d_sketch) sketches shard over the fleet "
+                    "axis like every other per-client leaf), or keep "
+                    "the default detector='zscore' without collusion"
+                )
             if dcfg.mtd:
                 topo = self.resolved_topology()
                 if topo is not None and not topo.is_star:
@@ -353,8 +365,18 @@ class RunConfig:
         keeps this module importable without jax."""
         if not self.defense:
             return None
+        import dataclasses as _dc
+
         from repro.defense.config import DefenseConfig
 
+        accepted = tuple(f.name for f in _dc.fields(DefenseConfig))
+        stray = sorted(set(self.defense_kwargs) - set(accepted))
+        if stray:
+            raise ValueError(
+                f"unknown defense_kwargs key(s) "
+                f"{', '.join(repr(s) for s in stray)}; accepted: "
+                f"{', '.join(accepted)}"
+            )
         return DefenseConfig(**dict(self.defense_kwargs))
 
 

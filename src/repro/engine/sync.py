@@ -340,11 +340,20 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
     if mtd_on:
         from repro.defense.adaptive import adaptive_aggregate
 
-        aggregate_mtd = adaptive_aggregate(aggregate, defense.cfg.mtd_trims)
+        aggregate_mtd = adaptive_aggregate(aggregate, defense.cfg.mtd_trims,
+                                           families=defense.cfg.mtd_families)
     kill_on = have_faults and faults.has("kill")
     corrupt_on = have_faults and (faults.has("scale") or faults.has("noise"))
     if corrupt_on:
         from repro.faults.inject import corrupt_updates
+    collude_on = have_faults and faults.has("collude")
+    if collude_on:
+        from repro.faults.inject import collude_updates
+    col_on = have_def and defense.collusion
+    sup_on = (have_def and defense.wants_labels and have_faults
+              and faults.has_pop and cfg.fault_exposure)
+    if sup_on:
+        from repro.faults.inject import effects_hit
     local_update = make_local_update(
         task.loss_fn, cfg.local_epochs, cfg.batch_size, task.examples_per_client
     )
@@ -386,6 +395,9 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
                 updated, params, eff, jax.random.fold_in(k_fault, 2),
                 faults.has("scale"), faults.has("noise"),
             )
+        if collude_on:
+            # after corrupt: the coalition's replacement is authoritative
+            updated = collude_updates(updated, params, eff)
         valid = mask > 0
         if kill_on:
             # a dropped client's update never reaches the server: weight 0
@@ -393,13 +405,21 @@ def _make_round_core(task: FLTask, cfg: RunConfig, policy: Policy, agg: Aggregat
         if have_def:
             # fold 108 (same schedule as the async engine); staleness is
             # identically zero in a sync round
-            dstate, suspect = defense.observe(
+            ages = (cohort_layout(sched_state["ages"][idx])
+                    if "ages" in sched_state else None)
+            dstate, suspect, w_scale = defense.observe(
                 dstate, jax.random.fold_in(k_sel, 108),
                 updated, params, idx, valid, jnp.zeros_like(idx),
+                losses=losses, ages=ages,
+                labels=cohort_layout(effects_hit(eff)) if sup_on else None,
             )
             valid = valid & ~cohort_layout(suspect[idx])
         # sync cohorts are never stale: staleness is identically zero
         w = agg.weigh(valid, jnp.zeros_like(idx))
+        if col_on:
+            # exact 1.0 on clique-free slots: calm armed rounds multiply
+            # the weights by ones
+            w = w * w_scale
         if mtd_on:
             params, tel = aggregate_mtd(
                 params, updated, params, w, idx, dstate["level"]

@@ -13,7 +13,9 @@ from repro.faults.inject import (  # noqa: F401
     Effects,
     Fault,
     FaultSet,
+    collude_updates,
     corrupt_updates,
+    effects_hit,
     identity_effects,
     merge_effects,
 )
@@ -30,7 +32,9 @@ __all__ = [
     "Effects",
     "Fault",
     "FaultSet",
+    "collude_updates",
     "corrupt_updates",
+    "effects_hit",
     "fault_names",
     "identity_effects",
     "known_fault_names",

@@ -55,6 +55,9 @@ class Effects(NamedTuple):
     delta_scale: jnp.ndarray  # (B,) f32 — multiply the slot's delta
     noise_sigma: jnp.ndarray  # (B,) f32 — gaussian noise added to the delta
     replay_shift: jnp.ndarray  # (B,) i32 — serve an older ring version
+    collude: jnp.ndarray  # (B,) f32 — 0 = honest, else the coalition's
+    #                         norm multiplier (update replaced by the
+    #                         shared poisoned direction, norm-matched)
 
 
 def identity_effects(shape) -> Effects:
@@ -63,6 +66,7 @@ def identity_effects(shape) -> Effects:
         delta_scale=jnp.ones(shape, jnp.float32),
         noise_sigma=jnp.zeros(shape, jnp.float32),
         replay_shift=jnp.zeros(shape, jnp.int32),
+        collude=jnp.zeros(shape, jnp.float32),
     )
 
 
@@ -70,13 +74,24 @@ def merge_effects(a: Effects, b: Effects) -> Effects:
     """Compose two faults' effects on the same cohort: kills OR, delta
     scales multiply, noise variances add (sigmas here are per-fault and
     independent — summing sigma is the conservative upper envelope),
-    replay shifts take the max."""
+    replay shifts take the max, collusion multipliers take the max
+    (two coalitions cannot both replace one slot's update)."""
     return Effects(
         kill=a.kill | b.kill,
         delta_scale=a.delta_scale * b.delta_scale,
         noise_sigma=a.noise_sigma + b.noise_sigma,
         replay_shift=jnp.maximum(a.replay_shift, b.replay_shift),
+        collude=jnp.maximum(a.collude, b.collude),
     )
+
+
+def effects_hit(eff: Effects) -> jnp.ndarray:
+    """(B,) bool — slots some armed fault actually touched this pop.
+
+    The per-slot ground-truth label the learned defense head trains
+    against in ``fault_exposure`` evaluation mode."""
+    return (eff.kill | (eff.delta_scale != 1.0) | (eff.noise_sigma > 0.0)
+            | (eff.replay_shift > 0) | (eff.collude > 0.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,7 +99,7 @@ class Fault:
     """One registered fault: per-client state + pure injection hooks."""
 
     name: str
-    channels: Tuple[str, ...]  # of: kill latency scale noise replay
+    channels: Tuple[str, ...]  # of: kill latency scale noise replay collude
     rate: float = 0.0
     scope: str = "engine"  # engine | serve
     async_only: bool = False
@@ -221,6 +236,61 @@ def corrupt_updates(updated, bases, eff: Effects, key,
         return u
 
     out = [one(i, u, b) for i, (u, b) in enumerate(zip(lu, lb))]
+    return jax.tree.unflatten(jax.tree.structure(updated), out)
+
+
+# Host-side RNG seed for the coalition's shared poisoned direction —
+# fixed across rounds (that persistence is the attack: a drifting poison
+# direction would average itself away in the aggregate, and is exactly
+# what the defense's historical-direction sketches converge on).
+COLLUDE_SEED = 0xC0A11D0
+_COLLUDE_CACHE: dict = {}
+
+
+def _collude_direction(shapes):
+    """Unit-norm (over the whole pytree) poison direction, cached by the
+    per-slot leaf shapes so every engine embeds identical constants."""
+    import numpy as np
+
+    key = tuple(shapes)
+    cached = _COLLUDE_CACHE.get(key)
+    if cached is None:
+        rng = np.random.default_rng(COLLUDE_SEED)
+        leaves = [rng.standard_normal(shp).astype(np.float32)
+                  for shp in shapes]
+        gnorm = np.sqrt(sum(float((lv.astype(np.float64) ** 2).sum())
+                            for lv in leaves)) or 1.0
+        cached = [lv / np.float32(gnorm) for lv in leaves]
+        _COLLUDE_CACHE[key] = cached
+    return cached
+
+
+def collude_updates(updated, bases, eff: Effects):
+    """Apply the collude channel: a hit slot's update is replaced by
+    ``base + mult * own_norm * shared_direction`` — the coalition's
+    common poisoned direction, norm-matched to the slot's own honest
+    delta (times the per-slot jitter multiplier), so per-slot norm
+    statistics see nothing. Missed slots keep their exact input buffer
+    (bitwise identity, like :func:`corrupt_updates`). No key needed:
+    the direction is a trace-time constant and the jitter was drawn on
+    the fault's own fold at pop time.
+    """
+    lu = jax.tree.leaves(updated)
+    lb = jax.tree.leaves(bases)
+    shapes = tuple(tuple(u.shape[1:]) for u in lu)
+    dirs = _collude_direction(shapes)
+
+    nonb = lambda d: tuple(range(1, d.ndim))  # noqa: E731
+    sq = sum(jnp.sum(((u - b).astype(jnp.float32)) ** 2, axis=nonb(u))
+             for u, b in zip(lu, lb))
+    mag = jnp.sqrt(sq) * eff.collude  # (B,) target norms, 0 if missed
+    hit = eff.collude > 0.0
+
+    out = []
+    for u, b, dv in zip(lu, lb, dirs):
+        ws = (-1,) + (1,) * (u.ndim - 1)
+        poison = b + (mag.reshape(ws) * jnp.asarray(dv)).astype(u.dtype)
+        out.append(jnp.where(hit.reshape(ws), poison, u))
     return jax.tree.unflatten(jax.tree.structure(updated), out)
 
 
@@ -397,6 +467,33 @@ def make_scale_attack(n: int, rate: float, factor: float = 10.0,
         return _count(fst, hit, idx), eff
 
     return Fault("scale_attack", channels=("scale",), rate=rate,
+                 init=_prone_init(n, client_frac), on_pop=on_pop)
+
+
+@register_fault("collude")
+def make_collude(n: int, rate: float, client_frac: float = 0.25,
+                 jitter: float = 0.2) -> Fault:
+    """Colluding coalition: ``client_frac`` of the fleet shares one
+    fixed poisoned direction (see :data:`COLLUDE_SEED`); each hit slot
+    submits it norm-matched to its own honest delta times a lognormal
+    jitter ``exp(jitter * N(0, 1))`` — per-slot norm statistics see an
+    ordinary update, only cross-client direction *agreement over time*
+    gives the coalition away."""
+    _check_rate("collude", rate)
+    if jitter < 0:
+        raise ValueError(f"collude: jitter must be >= 0, got {jitter}")
+
+    def on_pop(fst, key, idx, valid):
+        k_hit, k_jit = (jax.random.fold_in(key, 0),
+                        jax.random.fold_in(key, 1))
+        hit = _cohort_hit(fst, k_hit, idx, valid, rate)
+        mult = jnp.exp(jnp.float32(jitter)
+                       * jax.random.normal(k_jit, idx.shape, jnp.float32))
+        eff = identity_effects(idx.shape)._replace(
+            collude=jnp.where(hit, mult, 0.0))
+        return _count(fst, hit, idx), eff
+
+    return Fault("collude", channels=("collude",), rate=rate,
                  init=_prone_init(n, client_frac), on_pop=on_pop)
 
 

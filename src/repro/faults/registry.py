@@ -16,6 +16,7 @@ _FAULTS: Dict[str, Callable] = {}
 # names ``repro.faults.inject`` registers on import — listed statically so
 # config validation can reject typos without importing jax
 BUILTIN_FAULTS = (
+    "collude",
     "corrupt",
     "dropout",
     "replica_crash",

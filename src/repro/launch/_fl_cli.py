@@ -124,6 +124,17 @@ def add_common_args(ap: argparse.ArgumentParser, defaults: Dict[str, Any]) -> No
                          "trimmed-mean trim fraction from windowed attack "
                          "pressure every STEPS aggregations (needs "
                          "--defense; star topology only)")
+    ap.add_argument("--detector", default=None, metavar="NAME",
+                    help="per-slot anomaly detector (zscore | learned). "
+                         "'learned' trains a logistic head online over the "
+                         "defense telemetry and reports its running AUC "
+                         "(needs --defense; default zscore is bit-for-bit "
+                         "the PR 9 scoring pipeline)")
+    ap.add_argument("--collusion", action="store_true",
+                    help="arm collusion-aware scoring: per-client historical "
+                         "update-direction sketches plus similarity-clique "
+                         "detection of coordinated (norm-invisible) "
+                         "coalitions (needs --defense)")
 
 
 def build_task(args: argparse.Namespace) -> FLTask:
@@ -202,11 +213,14 @@ def fault_args(args: argparse.Namespace) -> Dict[str, Any]:
 
 def defense_args(args: argparse.Namespace) -> Dict[str, Any]:
     """``defense``/``defense_kwargs`` RunConfig fields from the shared
-    ``--defense``/``--quarantine-threshold``/``--mtd-window`` flags."""
+    ``--defense``/``--quarantine-threshold``/``--mtd-window``/
+    ``--detector``/``--collusion`` flags."""
     if not args.defense:
-        if args.quarantine_threshold is not None or args.mtd_window is not None:
+        if (args.quarantine_threshold is not None or args.mtd_window is not None
+                or args.detector is not None or args.collusion):
             raise SystemExit(
-                "--quarantine-threshold/--mtd-window need --defense"
+                "--quarantine-threshold/--mtd-window/--detector/--collusion "
+                "need --defense"
             )
         return {}
     kw: Dict[str, Any] = {}
@@ -215,6 +229,10 @@ def defense_args(args: argparse.Namespace) -> Dict[str, Any]:
     if args.mtd_window is not None:
         kw["mtd"] = True
         kw["mtd_window"] = args.mtd_window
+    if args.detector is not None:
+        kw["detector"] = args.detector
+    if args.collusion:
+        kw["collusion"] = True
     return {"defense": True, "defense_kwargs": kw}
 
 
@@ -250,6 +268,14 @@ def print_defense_stats(load_stats: Optional[Dict[str, Any]]) -> None:
             f"readmitted {int(ls['def_readmitted'])})")
     if "def_mtd_level" in ls:
         line += f" mtd_level={int(ls['def_mtd_level'])}"
+    if "def_clique_hits" in ls:
+        line += f" clique_hits={int(ls['def_clique_hits'])}"
+    if "def_detector_auc" in ls:
+        import math
+
+        auc = float(ls["def_detector_auc"])
+        line += (" detector_auc=n/a" if math.isnan(auc)
+                 else f" detector_auc={auc:.3f}")
     print(line)
     if "tier_suspects" in ls:
         counts = ls["tier_suspects"]

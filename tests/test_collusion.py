@@ -1,0 +1,587 @@
+"""Collusion-aware defense (``repro.defense.collusion`` /
+``.learned`` / the family mtd ladder) and the ``collude`` fault.
+
+The contract under test extends ``tests/test_defense.py``:
+
+  * the ``collude`` fault is norm-invisible per slot (each poisoned
+    update carries the slot's own honest norm) and bitwise identity on
+    missed slots;
+  * clique scoring is a pure, slot-permutation-equivariant function of
+    the gathered histories, flags a coalition without flagging honest
+    clients, and never self-pairs duplicate slots of one client;
+  * the learned head cold-starts safe (sigmoid(0) < threshold), learns
+    to separate labelled cohorts, and reports an exact AUC;
+  * armed collusion + learned detection stay bitwise across chunked
+    execution, fleet sharding (ragged fleet sizes), and crash-restart;
+  * the family mtd ladder is bitwise the base rule at level 0 and each
+    rung mirrors its ``engine.robust`` registry twin.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import MNIST_CNN
+from repro.data.synthetic import make_image_dataset
+from repro.defense import DefenseConfig
+from repro.engine import (
+    AsyncEngine,
+    ShardedAsyncEngine,
+    SyncEngine,
+    make_engine,
+    run_engine,
+)
+
+SMALL_CNN = dataclasses.replace(
+    MNIST_CNN, name="paper-cnn-mnist-collusion", image_size=8,
+    conv_channels=(4, 8), fc_width=32,
+)
+
+N = 16
+
+# a quarter of the fleet colludes on every pop: norm-invisible by
+# construction, so the PR 9 norm/cosine channels alone stay quiet
+COLLUDE = dict(
+    faults=("collude",), fault_rate=1.0,
+    fault_kwargs={"collude": {"client_frac": 0.25, "jitter": 0.1}},
+)
+
+ARMED = dict(
+    defense=True,
+    defense_kwargs={"threshold": 0.3, "collusion": True,
+                    "detector": "learned", "clique_min_obs": 2},
+    fault_exposure=True,
+    **COLLUDE,
+)
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        "mnist-collusion", 10, 8, 1, 120, 60, seed=0, difficulty=0.8
+    )
+    return make_cnn_task(SMALL_CNN, train, test, n_clients=N)
+
+
+def _cfg(**kw):
+    from repro.engine import RunConfig
+
+    base = dict(
+        n_clients=N, k=4, m=4, policy="markov", rounds=4, local_epochs=1,
+        batch_size=5, eval_every=2, mode="async", buffer_size=3,
+        profile="mobile",
+    )
+    base.update(kw)
+    return RunConfig(**base)
+
+
+def _raw(leaf):
+    if hasattr(leaf, "dtype") and jax.dtypes.issubdtype(
+        leaf.dtype, jax.dtypes.prng_key
+    ):
+        return np.asarray(jax.random.key_data(leaf))
+    return np.asarray(leaf)
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(_raw(la), _raw(lb))
+
+
+# ---------------------------------------------------------------------------
+# (1) the collude fault: norm-invisible, bitwise on missed slots
+# ---------------------------------------------------------------------------
+
+
+def _toy_cohort(b=6, seed=0):
+    key = jax.random.PRNGKey(seed)
+    bases = {"w": jax.random.normal(key, (b, 5, 3)),
+             "b": jax.random.normal(jax.random.fold_in(key, 9), (b, 4))}
+    deltas = {
+        "w": jax.random.normal(jax.random.fold_in(key, 1), (b, 5, 3)) * 0.1,
+        "b": jax.random.normal(jax.random.fold_in(key, 2), (b, 4)) * 0.1,
+    }
+    updated = jax.tree.map(lambda p, d: p + d, bases, deltas)
+    return updated, bases
+
+
+def _norms(updated, bases):
+    sq = sum(
+        np.sum((np.asarray(u, np.float64) - np.asarray(b, np.float64)) ** 2,
+               axis=tuple(range(1, np.asarray(u).ndim)))
+        for u, b in zip(jax.tree.leaves(updated), jax.tree.leaves(bases)))
+    return np.sqrt(sq)
+
+
+def test_collude_updates_norm_invisible_and_identity_on_miss():
+    from repro.faults.inject import collude_updates, identity_effects
+
+    updated, bases = _toy_cohort()
+    mult = jnp.asarray([0.0, 1.0, 0.0, 1.3, 0.0, 0.8], jnp.float32)
+    eff = identity_effects((6,))._replace(collude=mult)
+    out = collude_updates(updated, bases, eff)
+
+    honest = _norms(updated, bases)
+    poisoned = _norms(out, bases)
+    hit = np.asarray(mult) > 0
+    # per-slot norm statistics see nothing: ||poison|| = mult * ||honest||
+    np.testing.assert_allclose(
+        poisoned[hit], (np.asarray(mult) * honest)[hit], rtol=1e-5)
+    # missed slots keep their exact buffers
+    for u, o in zip(jax.tree.leaves(updated), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(u)[~hit],
+                                      np.asarray(o)[~hit])
+    # every hit slot points the same (shared, trace-constant) way
+    flat = np.concatenate(
+        [(np.asarray(o, np.float64) - np.asarray(b, np.float64))
+         .reshape(6, -1)
+         for o, b in zip(jax.tree.leaves(out), jax.tree.leaves(bases))],
+        axis=1)[hit]
+    unit = flat / np.linalg.norm(flat, axis=1, keepdims=True)
+    cos = unit @ unit.T
+    assert cos.min() > 1.0 - 1e-6
+
+
+def test_effects_hit_covers_every_channel():
+    from repro.faults.inject import effects_hit, identity_effects
+
+    eff = identity_effects((4,))
+    np.testing.assert_array_equal(np.asarray(effects_hit(eff)),
+                                  [False] * 4)
+    eff = eff._replace(collude=jnp.asarray([0.0, 0.9, 0.0, 0.0]))
+    np.testing.assert_array_equal(np.asarray(effects_hit(eff)),
+                                  [False, True, False, False])
+
+
+def test_collude_fault_validates_kwargs():
+    from repro.faults import make_fault
+
+    with pytest.raises(ValueError, match="jitter"):
+        make_fault("collude", 16, 0.5, jitter=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# (2) clique scoring: permutation equivariance + separation
+# ---------------------------------------------------------------------------
+
+
+def _clique_inputs(seed, b=12, d=32, n_colluders=3):
+    """The engine regime in miniature: honest histories share a loose
+    consensus direction (EWMA'd SGD updates on one objective), the
+    coalition shares a tight poison direction. First ``n_colluders``
+    rows collude."""
+    rng = np.random.default_rng(seed)
+    consensus = rng.standard_normal(d).astype(np.float32)
+    poison = rng.standard_normal(d).astype(np.float32)
+    hists = np.stack(
+        [poison + 0.05 * rng.standard_normal(d).astype(np.float32)
+         for _ in range(n_colluders)]
+        + [consensus + 0.6 * rng.standard_normal(d).astype(np.float32)
+           for _ in range(b - n_colluders)])
+    obs = np.full((b,), 5.0, np.float32)
+    valid = np.ones((b,), bool)
+    idx = np.arange(b, dtype=np.int32)
+    return hists, obs, valid, idx
+
+
+def _check_permutation_equivariance(seed):
+    from repro.defense.collusion import clique_scores
+
+    cfg = DefenseConfig(collusion=True, clique_min_obs=2)
+    hists, obs, valid, idx = _clique_inputs(seed)
+    perm = np.random.default_rng(seed + 1).permutation(len(idx))
+    a_c, a_f = clique_scores(jnp.asarray(hists), jnp.asarray(obs),
+                             jnp.asarray(valid), jnp.asarray(idx), cfg)
+    p_c, p_f = clique_scores(jnp.asarray(hists[perm]), jnp.asarray(obs[perm]),
+                             jnp.asarray(valid[perm]), jnp.asarray(idx[perm]),
+                             cfg)
+    # every reduction over the slot axis is a sort or a max, so the
+    # scores permute with the slots — up to ~1 ulp of GEMM-tiling
+    # reassociation in the two matmuls (edge vs main micro-kernels)
+    np.testing.assert_allclose(np.asarray(a_c)[perm], np.asarray(p_c),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a_f)[perm], np.asarray(p_f),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_clique_scores_permutation_equivariant():
+    """Property-based when hypothesis is available; otherwise a direct
+    seed sweep (the container may not ship hypothesis and installing it
+    is off the table)."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        for seed in range(5):
+            _check_permutation_equivariance(seed)
+        return
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def check(seed):
+        _check_permutation_equivariance(seed)
+
+    check()
+
+
+def test_clique_scores_flag_coalition_not_honest():
+    from repro.defense.collusion import clique_scores
+
+    cfg = DefenseConfig(collusion=True, clique_min_obs=2)
+    hists, obs, valid, idx = _clique_inputs(7, n_colluders=3)
+    s_clique, _ = clique_scores(jnp.asarray(hists), jnp.asarray(obs),
+                                jnp.asarray(valid), jnp.asarray(idx), cfg)
+    s = np.asarray(s_clique)
+    assert s[:3].min() > 0.5  # the coalition lights up
+    assert s[3:].max() < 0.2  # consensus-following honesty stays dark
+
+
+def test_clique_scores_never_self_pair_duplicate_slots():
+    """Async re-dispatch can pop two buffer slots of one client in a
+    cohort; agreeing with yourself is not collusion."""
+    from repro.defense.collusion import clique_scores
+
+    cfg = DefenseConfig(collusion=True, clique_min_obs=2)
+    hists, obs, valid, idx = _clique_inputs(3, n_colluders=2)
+    idx[1] = idx[0]  # the "coalition" is one client popped twice
+    s_clique, _ = clique_scores(jnp.asarray(hists), jnp.asarray(obs),
+                                jnp.asarray(valid), jnp.asarray(idx), cfg)
+    assert np.asarray(s_clique).max() < 0.2
+
+
+def test_flip_channel_flags_anti_aligned_history():
+    from repro.defense.collusion import clique_scores
+
+    cfg = DefenseConfig(collusion=True, clique_min_obs=2)
+    rng = np.random.default_rng(11)
+    d = 32
+    consensus = rng.standard_normal(d).astype(np.float32)
+    hists = np.stack(
+        [consensus + 0.3 * rng.standard_normal(d).astype(np.float32)
+         for _ in range(7)]
+        + [-consensus])
+    obs = np.full((8,), 5.0, np.float32)
+    s_clique, s_flip = clique_scores(
+        jnp.asarray(hists), jnp.asarray(obs), jnp.ones((8,), bool),
+        jnp.arange(8, dtype=jnp.int32), cfg)
+    f = np.asarray(s_flip)
+    assert f[-1] > 0.8  # the lone sign-flipper anti-aligns with center
+    assert f[:7].max() < f[-1]
+
+
+def test_project_deltas_unit_rows_and_zero_deltas():
+    from repro.defense.collusion import project_deltas
+
+    updated, bases = _toy_cohort(b=4, seed=3)
+    # slot 2 reports exactly its dispatch snapshot: no direction evidence
+    updated = jax.tree.map(
+        lambda u, b: u.at[2].set(b[2]), updated, bases)
+    rows = np.asarray(project_deltas(updated, bases, 16))
+    assert rows.shape == (4, 16)
+    nrm = np.linalg.norm(rows, axis=1)
+    np.testing.assert_allclose(nrm[[0, 1, 3]], 1.0, rtol=1e-5)
+    np.testing.assert_array_equal(rows[2], np.zeros((16,)))
+
+
+# ---------------------------------------------------------------------------
+# (3) the learned head: safe cold start, separation, exact AUC
+# ---------------------------------------------------------------------------
+
+
+def test_learned_head_cold_start_scores_half():
+    from repro.defense.learned import N_FEATURES, learned_observe
+
+    cfg = DefenseConfig(detector="learned")
+    dstate = {"lw": jnp.zeros((1, N_FEATURES), jnp.float32),
+              "auc": jnp.zeros((2, 16), jnp.float32)}
+    feats = jnp.asarray(np.random.default_rng(0).random((5, N_FEATURES)),
+                        jnp.float32)
+    _, p = learned_observe(dstate, feats, jnp.ones((5,), bool),
+                           jnp.zeros((5,), bool), cfg)
+    # sigmoid(0) = 0.5 < the 0.55 default threshold: an untrained head
+    # can never quarantine anyone
+    np.testing.assert_allclose(np.asarray(p), 0.5)
+    assert cfg.threshold > 0.5
+
+
+def test_learned_head_separates_and_auc_tracks():
+    from repro.defense.learned import (
+        N_FEATURES, auc_from_hist, learned_observe)
+
+    cfg = DefenseConfig(detector="learned", learned_lr=1.0)
+    dstate = {"lw": jnp.zeros((1, N_FEATURES), jnp.float32),
+              "auc": jnp.zeros((2, 16), jnp.float32)}
+    rng = np.random.default_rng(4)
+    valid = jnp.ones((8,), bool)
+    for _ in range(60):
+        feats = rng.random((8, N_FEATURES)).astype(np.float32) * 0.2
+        labels = np.zeros((8,), bool)
+        labels[:2] = True
+        feats[:2, 2] = 0.9  # positives carry a hot clique score
+        feats[:, 7] = 1.0  # the bias feature
+        dstate, p = learned_observe(
+            dstate, jnp.asarray(feats), valid, jnp.asarray(labels), cfg)
+    p = np.asarray(p)
+    assert p[:2].min() > p[2:].max()
+    assert auc_from_hist(dstate["auc"]) > 0.85
+
+
+def test_auc_from_hist_exact_and_nan_cases():
+    from repro.defense.learned import auc_from_hist
+
+    hist = np.zeros((2, 16))
+    assert np.isnan(auc_from_hist(hist))  # no observations yet
+    hist[0, 12] = 3.0  # every positive scored above
+    hist[1, 2] = 5.0  # ... every negative: perfect ranking
+    assert auc_from_hist(hist) == 1.0
+    tied = np.zeros((2, 16))
+    tied[0, 8] = 2.0
+    tied[1, 8] = 2.0  # all ties: chance, by the half-tie convention
+    assert auc_from_hist(tied) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# (4) engine integration: detection, parity, restart
+# ---------------------------------------------------------------------------
+
+
+def test_sync_collusion_catches_coalition(small_task):
+    """The closed loop at a cohort size where colluders co-occur: the
+    coalition accumulates clique evidence and reputation separates it
+    from honest clients (the attack is norm-invisible, so this is the
+    sketch channel's catch, not the norm channel's)."""
+    res = run_engine(make_engine(small_task, _cfg(
+        mode="sync", buffer_size=None, profile="lognormal",
+        k=12, m=12, rounds=10, fault_exposure=True,
+        defense=True,
+        defense_kwargs={"threshold": 0.5, "ewma": 0.5, "collusion": True,
+                        "clique_min_obs": 2},
+        **COLLUDE,
+    )))
+    exposed = res.fault_exposure["collude"] > 0
+    assert exposed.sum() > 0
+    assert res.load_stats["def_clique_hits"] > 0
+    rep = res.defense["reputation"]
+    # coalition reputations separate from the honest fleet's
+    assert np.median(rep[exposed]) > rep[~exposed].max()
+
+
+def test_learned_detector_runs_with_exposure_labels(small_task):
+    """Evaluation mode: fault_exposure feeds the head per-slot ground
+    truth and the AUC counter actually observes both classes."""
+    res = run_engine(make_engine(small_task, _cfg(
+        rounds=10, **ARMED,
+    )))
+    auc = res.load_stats["def_detector_auc"]
+    assert not np.isnan(auc) and 0.0 <= auc <= 1.0
+    assert res.load_stats["def_clique_hits"] >= 0
+
+
+def test_armed_collusion_chunked_matches_per_step(small_task):
+    eng = make_engine(small_task, _cfg(rounds=8, **ARMED))
+    sa = eng.init()
+    for r in range(8):
+        sa, _ = eng.step(sa, r)
+    sc, _ = eng.run_chunk(eng.init(), 0, 8, False)
+    _assert_trees_equal(eng.eval_params(sa), eng.eval_params(sc))
+    _assert_trees_equal(sa["defense"], sc["defense"])
+
+
+RAGGED_NS = [8, 12, 16]
+
+
+def _check_sharded_parity(n):
+    """Fleet-sharded vs single-device with collusion + learned armed:
+    the (n, d_sketch) sketches shard over the fleet axis, the (1, F)
+    head and (2, 16) AUC histograms replicate — and every defense leaf
+    plus the eval params must agree bit-for-bit."""
+    from repro.fl import make_cnn_task
+
+    train, test = make_image_dataset(
+        f"mnist-collusion-s{n}", 10, 8, 1, 120, 60, seed=0, difficulty=0.8
+    )
+    task = make_cnn_task(SMALL_CNN, train, test, n_clients=n)
+    cfg = lambda **kw: _cfg(n_clients=n, rounds=6, **ARMED, **kw)  # noqa: E731
+    single = AsyncEngine(task, cfg())
+    sharded = ShardedAsyncEngine(task, cfg(mesh_shards=0))
+    s1, _ = single.run_chunk(single.init(), 0, 6, False)
+    s2, _ = sharded.run_chunk(sharded.init(), 0, 6, False)
+    _assert_trees_equal(s1["defense"], s2["defense"])
+    _assert_trees_equal(single.eval_params(s1), sharded.eval_params(s2))
+
+
+def test_collusion_sharded_matches_single_ragged():
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        for n in RAGGED_NS[:2]:
+            _check_sharded_parity(n)
+        return
+
+    @settings(max_examples=3, deadline=None)
+    @given(n=st.sampled_from(RAGGED_NS))
+    def check(n):
+        _check_sharded_parity(n)
+
+    check()
+
+
+def test_crash_restart_resumes_bitwise_with_collusion(small_task, tmp_path):
+    """Sketches, head weights, and AUC histograms all live on the carry:
+    a restart from the checkpoint must continue bit-for-bit."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    engine = AsyncEngine(small_task, _cfg(rounds=6, rng_impl="rbg", **ARMED))
+    full, _ = engine.run_chunk(engine.init(), 0, 6, False)
+
+    half, _ = engine.run_chunk(engine.init(), 0, 3, False)
+    save_checkpoint(str(tmp_path / "crash"), half, step=3)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), half
+    )
+    restored, step = load_checkpoint(str(tmp_path / "crash"), like)
+    assert step == 3
+    resumed, _ = engine.run_chunk(restored, 3, 3, False)
+    _assert_trees_equal(full, resumed)
+
+
+def test_sync_engine_runs_learned_collusion(small_task):
+    res = run_engine(SyncEngine(small_task, _cfg(
+        mode="sync", buffer_size=None, profile="lognormal",
+        k=8, m=8, rounds=6, **ARMED,
+    )))
+    assert "def_detector_auc" in res.load_stats
+    assert "def_clique_hits" in res.load_stats
+
+
+# ---------------------------------------------------------------------------
+# (5) the aggregator-family mtd ladder
+# ---------------------------------------------------------------------------
+
+
+def _base_apply():
+    from repro.engine.aggregators import acc_stats
+    from repro.engine.registry import make_aggregator
+
+    agg = make_aggregator("fedavg")
+
+    def base_apply(gp, u, b, wv, ix):
+        acc = agg.accumulate(agg.init(gp), u, b, wv)
+        return agg.finalize(gp, acc), acc_stats(acc)
+
+    return base_apply
+
+
+def _family_fixture(seed=3, b=8):
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (3, 4))}
+    updates = {"w": g["w"][None] + jax.random.normal(
+        jax.random.fold_in(key, 1), (b, 3, 4))}
+    return g, updates, jnp.ones((b,), jnp.float32), jnp.arange(b)
+
+
+def test_family_ladder_level0_is_bitwise_base():
+    from repro.defense import adaptive_aggregate
+
+    g, updates, w, idx = _family_fixture()
+    base_apply = _base_apply()
+    wrapped = adaptive_aggregate(
+        base_apply, (0.0, 0.2, 0.0, 0.0),
+        families=("base", "trimmed_mean", "coordinate_median", "norm_clip"))
+    p0, _ = wrapped(g, updates, g, w, idx, jnp.int32(0))
+    pb, _ = base_apply(g, updates, g, w, idx)
+    _assert_trees_equal(p0, pb)
+
+
+def test_family_rungs_match_robust_registry_twins():
+    from repro.defense import adaptive_aggregate
+    from repro.engine.registry import make_aggregator
+
+    g, updates, w, idx = _family_fixture()
+    base_apply = _base_apply()
+    wrapped = adaptive_aggregate(
+        base_apply, (0.0, 0.2, 0.0, 0.0),
+        families=("base", "trimmed_mean", "coordinate_median", "norm_clip"))
+
+    def ref(name, **kw):
+        agg = make_aggregator(name, **kw)
+        wr = agg.weigh(w > 0, jnp.zeros(w.shape, jnp.int32))
+        return agg.finalize(g, agg.accumulate(agg.init(g), updates, g, wr))
+
+    p1, _ = wrapped(g, updates, g, w, idx, jnp.int32(1))
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               np.asarray(ref("trimmed_mean", trim=0.2)["w"]),
+                               rtol=1e-5)
+    p2, _ = wrapped(g, updates, g, w, idx, jnp.int32(2))
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.asarray(ref("coordinate_median")["w"]),
+                               rtol=1e-5)
+    # the norm_clip rung clips at the cohort's *median* delta norm; its
+    # registry twin takes a static radius — hand it that median
+    deltas = np.asarray(updates["w"], np.float64) - np.asarray(g["w"])
+    med = float(np.median(np.sqrt((deltas ** 2).sum(axis=(1, 2)))))
+    p3, _ = wrapped(g, updates, g, w, idx, jnp.int32(3))
+    np.testing.assert_allclose(
+        np.asarray(p3["w"]),
+        np.asarray(ref("norm_clip", clip=med, staleness_mode="const")["w"]),
+        rtol=1e-5)
+    # out-of-range levels clamp to the top rung instead of crashing
+    p9, _ = wrapped(g, updates, g, w, idx, jnp.int32(9))
+    _assert_trees_equal(p3, p9)
+
+
+def test_family_ladder_escalates_in_engine(small_task):
+    """Under a sustained collusion attack the family ladder leaves the
+    base rung; calm fleets never do (level 0 stays bitwise-base, which
+    test_threshold_inf_defense_is_bitwise_identity pins engine-wide)."""
+    kw = dict(
+        defense=True,
+        defense_kwargs={
+            "threshold": 0.5, "ewma": 0.5, "collusion": True,
+            "clique_min_obs": 2, "mtd": True, "mtd_window": 2,
+            "mtd_up": 0.35, "mtd_down": 0.01,
+            "mtd_trims": (0.0, 0.1, 0.0, 0.0),
+            "mtd_families": ("base", "trimmed_mean", "coordinate_median",
+                             "norm_clip"),
+        },
+    )
+    hot = run_engine(make_engine(small_task, _cfg(
+        mode="sync", buffer_size=None, profile="lognormal",
+        k=12, m=12, rounds=10, **kw, **COLLUDE,
+    )))
+    calm = run_engine(make_engine(small_task, _cfg(
+        mode="sync", buffer_size=None, profile="lognormal",
+        k=12, m=12, rounds=10, **kw,
+    )))
+    assert hot.load_stats["def_mtd_level"] > 0
+    assert calm.load_stats["def_mtd_level"] == 0
+
+
+# ---------------------------------------------------------------------------
+# (6) CLI report surface
+# ---------------------------------------------------------------------------
+
+
+def test_print_defense_stats_reports_new_columns(capsys):
+    from repro.launch._fl_cli import print_defense_stats
+
+    print_defense_stats({
+        "def_quarantined_now": 2, "def_probation_now": 1,
+        "def_quarantine_inflow": 3, "def_readmitted": 0,
+        "def_mtd_level": 1, "def_clique_hits": 7.0,
+        "def_detector_auc": 0.912,
+    })
+    out = capsys.readouterr().out
+    assert "clique_hits=7" in out
+    assert "detector_auc=0.912" in out
+    print_defense_stats({
+        "def_quarantined_now": 0, "def_probation_now": 0,
+        "def_quarantine_inflow": 0, "def_readmitted": 0,
+        "def_detector_auc": float("nan"),
+    })
+    assert "detector_auc=n/a" in capsys.readouterr().out

@@ -105,6 +105,38 @@ def test_defense_config_validates_knobs():
         DefenseConfig(mtd_up=0.05, mtd_down=0.1)
 
 
+def test_defense_config_validates_collusion_knobs():
+    from repro.defense import DefenseConfig
+
+    DefenseConfig(detector="learned", collusion=True,
+                  mtd=True, mtd_families=("base", "coordinate_median"),
+                  mtd_trims=(0.0, 0.2))  # the full new surface is valid
+    with pytest.raises(ValueError, match="detector"):
+        DefenseConfig(detector="oracle")
+    with pytest.raises(ValueError, match="learned_lr"):
+        DefenseConfig(learned_lr=0.0)
+    with pytest.raises(ValueError, match="d_sketch"):
+        DefenseConfig(d_sketch=4)
+    with pytest.raises(ValueError, match="sketch_ewma"):
+        DefenseConfig(sketch_ewma=1.5)
+    with pytest.raises(ValueError, match="clique_thresh"):
+        DefenseConfig(clique_thresh=1.0)
+    with pytest.raises(ValueError, match="clique_min_obs"):
+        DefenseConfig(clique_min_obs=0)
+    # the family ladder must ride an armed mtd, match the trim ladder
+    # in length, keep the calm rung first, and name known families
+    with pytest.raises(ValueError, match="mtd_families"):
+        DefenseConfig(mtd_families=("base", "trimmed_mean"))
+    with pytest.raises(ValueError, match="mtd_families"):
+        DefenseConfig(mtd=True, mtd_families=("base",))
+    with pytest.raises(ValueError, match="mtd_families"):
+        DefenseConfig(mtd=True, mtd_trims=(0.0, 0.2),
+                      mtd_families=("trimmed_mean", "base"))
+    with pytest.raises(ValueError, match="mtd_families"):
+        DefenseConfig(mtd=True, mtd_trims=(0.0, 0.2),
+                      mtd_families=("base", "krum"))
+
+
 def test_run_config_gates_defense_flags():
     with pytest.raises(ValueError, match="defense_kwargs"):
         _cfg(defense_kwargs={"threshold": 0.5})
@@ -125,6 +157,29 @@ def test_run_config_gates_defense_flags():
     assert _cfg().resolved_defense() is None
 
 
+def test_run_config_rejects_stray_defense_kwargs():
+    """A typo'd knob must fail loudly and name every accepted key."""
+    with pytest.raises(ValueError, match="colusion.*accepted.*collusion"):
+        _cfg(defense=True, defense_kwargs={"colusion": True})
+
+
+def test_shard_cohort_rejects_collusion_and_learned():
+    """Collusion scoring and the learned head keep whole-cohort state a
+    cohort-sharded psum cannot merge; the error must point at the
+    working layout (fleet sharding: --mesh-shards without
+    --shard-cohort). Plain zscore stays allowed under shard_cohort."""
+    sync = dict(mode="sync", buffer_size=None, profile="lognormal",
+                mesh_shards=0, shard_cohort=True)
+    with pytest.raises(ValueError,
+                       match=r"--mesh-shards \*without\* --shard-cohort"):
+        _cfg(defense=True, defense_kwargs={"collusion": True}, **sync)
+    with pytest.raises(ValueError,
+                       match=r"--mesh-shards \*without\* --shard-cohort"):
+        _cfg(defense=True, defense_kwargs={"detector": "learned"}, **sync)
+    # the default detector keeps working cohort-sharded
+    assert _cfg(defense=True, **sync).resolved_defense().detector == "zscore"
+
+
 # ---------------------------------------------------------------------------
 # (2) structural gating + armed-never-triggered bitwise golden
 # ---------------------------------------------------------------------------
@@ -139,6 +194,35 @@ def test_defense_off_adds_no_state(small_task):
         "rep", "status", "quarantined", "readmitted",
         "pressure", "win_obs", "win", "level",
     }
+
+
+def test_collusion_and_learned_state_is_conditional(small_task):
+    """The sketch/head leaves exist exactly when their mechanism is
+    armed — the default detector must not grow the carry (and with it
+    the checkpoint schema) of every existing run."""
+    base_keys = set(
+        AsyncEngine(small_task, _cfg(defense=True)).init()["defense"])
+    col = AsyncEngine(small_task, _cfg(
+        defense=True, defense_kwargs={"collusion": True})).init()["defense"]
+    assert set(col) == base_keys | {"sketch", "sk_obs", "clique_hits"}
+    assert col["sketch"].shape == (N, 64)
+    lrn = AsyncEngine(small_task, _cfg(
+        defense=True,
+        defense_kwargs={"detector": "learned"})).init()["defense"]
+    assert set(lrn) == base_keys | {"lw", "auc"}
+
+
+def test_explicit_zscore_detector_is_bitwise_default(small_task):
+    """detector='zscore' spelled out must route through the exact
+    default scoring path (the PR 9 pipeline), not a rebuilt one."""
+    eng_d = make_engine(small_task, _cfg(rounds=4, **ARMED))
+    kw = dict(ARMED)
+    kw["defense_kwargs"] = {**ARMED["defense_kwargs"], "detector": "zscore"}
+    eng_z = make_engine(small_task, _cfg(rounds=4, **kw))
+    s1, _ = eng_d.run_chunk(eng_d.init(), 0, 4, False)
+    s2, _ = eng_z.run_chunk(eng_z.init(), 0, 4, False)
+    _assert_trees_equal(s1["defense"], s2["defense"])
+    _assert_trees_equal(eng_d.eval_params(s1), eng_z.eval_params(s2))
 
 
 @pytest.mark.parametrize("mode", ["async", "sync", "sharded"])
